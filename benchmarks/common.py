@@ -1,0 +1,75 @@
+"""Shared benchmark machinery: strategy×kernel matrices, CSV emission."""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.metrics import mae, mdf_table  # noqa: E402
+from repro.core.runner import run_strategy  # noqa: E402
+from repro.core.spaces import make_objective  # noqa: E402
+from repro.core.strategies import make_strategy  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    """The run.py contract: ``name,us_per_call,derived`` CSV rows."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def run_matrix(kernels: Sequence[str], gpu: str, strategies: Sequence[str],
+               repeats: int, budget: int = 220,
+               random_repeats: Optional[int] = None) -> Dict:
+    """Per (kernel, strategy): traces + mean MAE (paper methodology)."""
+    out: Dict[str, Dict[str, Dict]] = {}
+    for kernel in kernels:
+        obj = make_objective(kernel, gpu)
+        out[kernel] = {}
+        for strat in strategies:
+            reps = (random_repeats or repeats) if strat == "random" else repeats
+            traces, times = [], []
+            for seed in range(reps):
+                t0 = time.time()
+                res = run_strategy(make_strategy(strat), obj, budget=budget,
+                                   seed=seed)
+                times.append(time.time() - t0)
+                traces.append(res.trace)
+            maes = [mae(t, obj.optimum) for t in traces]
+            out[kernel][strat] = {
+                "mean_mae": float(np.mean(maes)),
+                "std_mae": float(np.std(maes)),
+                "mean_wall_s": float(np.mean(times)),
+                "best_final": float(np.mean([t[min(len(t), budget) - 1]
+                                             for t in traces])),
+                "optimum": obj.optimum,
+                "traces": [t.tolist() for t in traces],
+            }
+    return out
+
+
+def mdf_from_matrix(matrix: Dict) -> Dict:
+    per_kernel = {k: {s: v["mean_mae"] for s, v in d.items()}
+                  for k, d in matrix.items()}
+    return mdf_table(per_kernel)
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    slim = json.loads(json.dumps(payload, default=float))
+    with open(path, "w") as f:
+        json.dump(slim, f, indent=1)
+    return path
+
+
+def strip_traces(matrix: Dict) -> Dict:
+    return {k: {s: {kk: vv for kk, vv in v.items() if kk != "traces"}
+                for s, v in d.items()} for k, d in matrix.items()}

@@ -1,0 +1,28 @@
+"""Fig. 1: our BO strategies vs Kernel Tuner baselines, GTX Titan X spaces."""
+from __future__ import annotations
+
+from benchmarks.common import (emit, mdf_from_matrix, run_matrix, save_json,
+                               strip_traces)
+
+KERNELS = ("gemm", "convolution", "pnpoly")
+STRATEGIES = ("advanced_multi", "multi", "ei",
+              "genetic_algorithm", "mls", "simulated_annealing", "random")
+
+
+def main(repeats: int = 7) -> dict:
+    matrix = run_matrix(KERNELS, "gtx_titan_x", STRATEGIES, repeats,
+                        random_repeats=max(repeats * 2, 10))
+    mdf = mdf_from_matrix(matrix)
+    for kernel, d in matrix.items():
+        for strat, v in d.items():
+            emit(f"fig1/{kernel}/{strat}", v["mean_wall_s"] * 1e6,
+                 f"mae={v['mean_mae']:.4f}")
+    for strat, v in mdf.items():
+        emit(f"fig1/mdf/{strat}", 0.0, f"mdf={v['mdf']:.4f}±{v['std']:.3f}")
+    save_json("fig1", {"matrix": strip_traces(matrix), "mdf": mdf,
+                       "repeats": repeats})
+    return {"matrix": matrix, "mdf": mdf}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Fig. 4: evaluations other strategies need to match EI's best at 220
+(GEMM, GTX Titan X; cap 1020)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.metrics import evals_to_match
+from repro.core.runner import run_strategy
+from repro.core.spaces import make_objective
+from repro.core.strategies import make_strategy
+
+OTHERS = ("genetic_algorithm", "mls", "simulated_annealing", "random")
+CAP = 1020
+
+
+def main(repeats: int = 7) -> dict:
+    obj = make_objective("gemm", "gtx_titan_x")
+    ei_best = []
+    for seed in range(repeats):
+        res = run_strategy(make_strategy("ei"), obj, budget=220, seed=seed)
+        ei_best.append(res.best_value)
+    target = float(np.mean(ei_best))
+    emit("fig4/ei_target", 0.0, f"best_at_220={target:.4f}")
+
+    out = {"target": target, "others": {}}
+    for strat in OTHERS:
+        evals = []
+        for seed in range(repeats):
+            res = run_strategy(make_strategy(strat), obj, budget=CAP, seed=seed)
+            evals.append(evals_to_match(res.trace, target, CAP))
+        mean_evals = float(np.mean(evals))
+        frac_matched = float(np.mean([e <= CAP for e in evals]))
+        out["others"][strat] = {"mean_evals": mean_evals,
+                                "frac_matched": frac_matched}
+        emit(f"fig4/{strat}", 0.0,
+             f"evals_to_match={mean_evals:.0f} matched={frac_matched:.0%}")
+    save_json("fig4", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

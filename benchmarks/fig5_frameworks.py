@@ -1,0 +1,27 @@
+"""Fig. 5: other-framework BO analogues vs ours (RTX 2070 Super spaces)."""
+from __future__ import annotations
+
+from benchmarks.common import (emit, mdf_from_matrix, run_matrix, save_json,
+                               strip_traces)
+
+KERNELS = ("gemm", "convolution", "pnpoly")
+STRATEGIES = ("advanced_multi", "multi", "ei",
+              "bayesopt_ucb", "skopt_gphedge", "random")
+
+
+def main(repeats: int = 5) -> dict:
+    matrix = run_matrix(KERNELS, "rtx_2070_super", STRATEGIES, repeats,
+                        random_repeats=max(repeats * 2, 10))
+    mdf = mdf_from_matrix(matrix)
+    for kernel, d in matrix.items():
+        for strat, v in d.items():
+            emit(f"fig5/{kernel}/{strat}", v["mean_wall_s"] * 1e6,
+                 f"mae={v['mean_mae']:.4f}")
+    for strat, v in mdf.items():
+        emit(f"fig5/mdf/{strat}", 0.0, f"mdf={v['mdf']:.4f}")
+    save_json("fig5", {"matrix": strip_traces(matrix), "mdf": mdf})
+    return {"matrix": matrix, "mdf": mdf}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Figs. 6/7: unseen kernels (ExpDist 50.8% invalid, Adding) on the A100."""
+from __future__ import annotations
+
+from benchmarks.common import (emit, mdf_from_matrix, run_matrix, save_json,
+                               strip_traces)
+
+KERNELS = ("expdist", "adding")
+STRATEGIES = ("advanced_multi", "multi", "ei",
+              "genetic_algorithm", "mls", "simulated_annealing", "random")
+
+
+def main(repeats: int = 7) -> dict:
+    matrix = run_matrix(KERNELS, "a100", STRATEGIES, repeats,
+                        random_repeats=max(repeats * 2, 10))
+    mdf = mdf_from_matrix(matrix)
+    for kernel, d in matrix.items():
+        for strat, v in d.items():
+            emit(f"fig6_7/{kernel}/{strat}", v["mean_wall_s"] * 1e6,
+                 f"mae={v['mean_mae']:.4f}")
+    for strat, v in mdf.items():
+        emit(f"fig6_7/mdf/{strat}", 0.0, f"mdf={v['mdf']:.4f}")
+    save_json("fig6_7", {"matrix": strip_traces(matrix), "mdf": mdf})
+    return {"matrix": matrix, "mdf": mdf}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Pallas-kernel and GP-engine microbenchmarks.
+
+Wall-times here are CPU/interpret numbers (the TPU is the target; interpret
+mode validates semantics). The informative derived columns are the
+allclose-vs-oracle error and the incremental-GP speedup, which are
+machine-meaningful on any host.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json
+from repro.core.gp import GP
+from repro.core.gp_fast import IncrementalGP
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6, out
+
+
+def bench_gemm():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    us, out = _time(lambda: ops.gemm(a, b, block_m=128, block_n=128, block_k=128))
+    err = float(jnp.max(jnp.abs(out - ref.gemm(a, b))))
+    emit("kernels/gemm_interp_512", us, f"maxerr={err:.2e}")
+
+
+def bench_flash():
+    rng = np.random.default_rng(1)
+    q, k, v = (jnp.asarray(rng.normal(size=(1, 512, 4, 64)), jnp.float32)
+               for _ in range(3))
+    us, out = _time(lambda: ops.flash_attention(q, k, v, block_q=128,
+                                                block_kv=128))
+    err = float(jnp.max(jnp.abs(out - ref.attention(q, k, v))))
+    emit("kernels/flash_interp_512", us, f"maxerr={err:.2e}")
+
+
+def bench_gp_engines():
+    """The paper's per-iteration cost: exhaustive posterior over ~18k configs."""
+    rng = np.random.default_rng(2)
+    N, d, T = 17956, 15, 220
+    Xc = rng.random((N, d)).astype(np.float32)
+
+    g_fast = IncrementalGP(Xc, max_obs=T, ell=2.0)
+    t0 = time.time()
+    for i in range(60):
+        g_fast.add(Xc[rng.integers(N)], float(rng.normal(10, 2)))
+        g_fast.predict()
+    fast_us = (time.time() - t0) / 60 * 1e6
+
+    g_jax = GP(d, max_obs=T, ell=2.0)
+    for i in range(60):
+        g_jax.add(Xc[rng.integers(N)], float(rng.normal(10, 2)))
+    t0 = time.time()
+    g_jax.fit()
+    mu, _ = g_jax.predict(Xc)
+    jax.block_until_ready(mu)
+    t_once = time.time() - t0
+    for _ in range(2):
+        g_jax.add(Xc[rng.integers(N)], 10.0)
+        t0 = time.time()
+        g_jax.fit()
+        mu, _ = g_jax.predict(Xc)
+        jax.block_until_ready(mu)
+        t_once = time.time() - t0
+    jax_us = t_once * 1e6
+
+    emit("gp/incremental_per_iter", fast_us, f"N={N} T={T}")
+    emit("gp/padded_jax_per_iter", jax_us, f"speedup={jax_us / fast_us:.1f}x")
+    save_json("gp_engines", {"fast_us": fast_us, "jax_us": jax_us,
+                             "speedup": jax_us / fast_us})
+
+
+def bench_matern_kernel():
+    rng = np.random.default_rng(3)
+    N, d, t = 4096, 15, 37
+    Xc = rng.random((N, d)).astype(np.float32)
+    g = IncrementalGP(Xc, max_obs=64, ell=2.0)
+    for _ in range(t):
+        g.add(Xc[rng.integers(N)], float(rng.normal(10, 2)))
+    x_obs, vinv, w, mask, y_mean, y_std = ops.gp_inputs_from_incremental(g)
+    args = (jnp.asarray(Xc), jnp.asarray(x_obs), jnp.asarray(vinv),
+            jnp.asarray(w), jnp.asarray(mask))
+    us, (mean_k, _) = _time(lambda: ops.gp_posterior(*args, ell=2.0,
+                                                     block_n=512))
+    mu_i, _ = g.predict()
+    err = float(np.max(np.abs(y_mean + y_std * np.asarray(mean_k) - mu_i)))
+    emit("kernels/matern_gp_interp_4k", us, f"vs_engine_err={err:.2e}")
+
+
+def main(repeats: int = 3) -> None:
+    bench_gemm()
+    bench_flash()
+    bench_matern_kernel()
+    bench_gp_engines()
+
+
+if __name__ == "__main__":
+    main()

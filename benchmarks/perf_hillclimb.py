@@ -1,0 +1,42 @@
+"""§Perf hillclimb reporter: emits every hillclimb variant's roofline terms.
+
+The actual experiments are driven by `repro.launch.dryrun` (tags A*/B*/C*)
+and by `examples/tune_sharding.py` (the BO-driven C cell); this module
+re-reads the cached records so `python -m benchmarks.run` reproduces the
+§Perf tables from EXPERIMENTS.md without recompiling.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+HILL_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "hillclimb")
+
+
+def main(repeats: int = 0) -> None:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(HILL_DIR, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        tag = os.path.basename(f).split("__")[0]
+        recs.append((tag, r))
+    if not recs:
+        emit("perf/none", 0.0, "no hillclimb records (run scripts/rerun_all.sh)")
+        return
+    for tag, r in recs:
+        if r.get("status") != "ok":
+            emit(f"perf/{tag}", 0.0, f"status={r.get('status')}")
+            continue
+        rf = r["roofline"]
+        emit(f"perf/{tag}/{r['arch']}/{r['shape']}/{r['mesh']}",
+             r.get("t_compile_s", 0.0) * 1e6,
+             f"t=({rf['t_compute']:.2f};{rf['t_memory']:.2f};"
+             f"{rf['t_collective']:.2f})s dom={rf['dominant']} "
+             f"frac={100 * (rf.get('roofline_fraction') or 0):.3f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""§Roofline table generator: reads the dry-run JSON cache, emits the
+per-(arch × shape × mesh) three-term table (markdown + CSV rows)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import emit, save_json
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["deepseek-v3-671b", "qwen3-moe-30b-a3b", "recurrentgemma-9b",
+              "gemma-2b", "mistral-large-123b", "internlm2-1.8b",
+              "stablelm-3b", "musicgen-large", "chameleon-34b", "xlstm-1.3b"]
+
+
+def load(tag: str = "baseline") -> List[Dict]:
+    recs = []
+    for f in glob.glob(os.path.join(DRYRUN_DIR, f"{tag}__*.json")):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def markdown_table(recs: List[Dict], mesh: str = "single") -> str:
+    rows = {(r["arch"], r["shape"]): r for r in recs if r.get("mesh") == mesh}
+    lines = [
+        f"| arch | shape | status | t_compute (s) | t_memory (s) | t_collective (s) "
+        f"| dominant | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = rows.get((a, s))
+            if r is None:
+                continue
+            if r["status"] == "skip":
+                lines.append(f"| {a} | {s} | SKIP | — | — | — | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {a} | {s} | {r['status']} | — | — | — | — | — | — |")
+                continue
+            rf = r["roofline"]
+            u = rf.get("useful_flops_ratio") or 0.0
+            frac = rf.get("roofline_fraction") or 0.0
+            lines.append(
+                f"| {a} | {s} | ok | {rf['t_compute']:.3f} | {rf['t_memory']:.3f} "
+                f"| {rf['t_collective']:.3f} | {rf['dominant']} | {u:.3f} "
+                f"| {100 * frac:.3f}% |")
+    return "\n".join(lines)
+
+
+def main(repeats: int = 0, tag: str = "baseline") -> dict:
+    recs = load(tag)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in sorted(ok, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        rf = r["roofline"]
+        emit(f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}",
+             r.get("t_compile_s", 0.0) * 1e6,
+             f"dom={rf['dominant']} t=({rf['t_compute']:.3f};"
+             f"{rf['t_memory']:.3f};{rf['t_collective']:.3f})s "
+             f"frac={100 * (rf.get('roofline_fraction') or 0):.3f}%")
+    md_single = markdown_table(recs, "single")
+    md_multi = markdown_table(recs, "multi")
+    save_json("roofline", {"n_ok": len(ok), "n_total": len(recs)})
+    out_md = os.path.join(DRYRUN_DIR, f"{tag}_roofline.md")
+    with open(out_md, "w") as f:
+        f.write("## single-pod (16×16 = 256 chips)\n\n" + md_single +
+                "\n\n## multi-pod (2×16×16 = 512 chips)\n\n" + md_multi + "\n")
+    emit("roofline/summary", 0.0,
+         f"ok={len(ok)} skip={sum(1 for r in recs if r.get('status') == 'skip')} "
+         f"md={out_md}")
+    return {"md_single": md_single, "md_multi": md_multi}
+
+
+if __name__ == "__main__":
+    main()

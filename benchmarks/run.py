@@ -1,0 +1,50 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Default repeats are reduced for a
+single-core container; pass ``--repeats 35`` to reproduce the paper's
+statistics exactly (EXPERIMENTS.md quotes a full run).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig1,...] [--repeats N]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig1,fig4,fig5,fig6_7,"
+                         "table1,kernels,roofline")
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_comparison, fig4_extended, fig5_frameworks,
+                            fig6_7_unseen, kernel_bench, perf_hillclimb,
+                            roofline_table, table1_hyperparams)
+
+    suite = {
+        "fig1": (fig1_comparison.main, 7),
+        "fig4": (fig4_extended.main, 5),
+        "fig5": (fig5_frameworks.main, 3),
+        "fig6_7": (fig6_7_unseen.main, 7),
+        "table1": (table1_hyperparams.main, 5),
+        "kernels": (kernel_bench.main, 3),
+        "roofline": (roofline_table.main, 0),
+        "perf": (perf_hillclimb.main, 0),
+    }
+    only = args.only.split(",") if args.only else list(suite)
+    for name in only:
+        fn, default_reps = suite[name]
+        reps = args.repeats if args.repeats is not None else default_reps
+        t0 = time.time()
+        print(f"# === {name} (repeats={reps}) ===", file=sys.stderr)
+        fn(reps) if reps else fn()
+        print(f"# === {name} done in {time.time() - t0:.1f}s ===",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

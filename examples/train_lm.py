@@ -1,0 +1,83 @@
+"""End-to-end driver: train an LM with the full substrate.
+
+Demonstrates data pipeline → model → optimizer → fault-tolerant loop (async
+checkpoints, straggler log, injected failure + automatic restart).
+
+Two presets:
+  * default — ~100M parameters (12L × d512, 50k vocab). A few hundred steps
+    is a real-accelerator workload (~1.2 TFLOP/step); on this 1-core CPU
+    container use --steps 20 to see it run end to end.
+  * --small — ~25M parameters (8L × d256, 16k vocab), CPU-friendly: 300
+    steps in ~10 min, loss visibly decreasing.
+
+  PYTHONPATH=src python examples/train_lm.py --small --steps 300
+  PYTHONPATH=src python examples/train_lm.py --steps 20   # 100M preset
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.arch import ArchConfig
+from repro.data.pipeline import DataConfig
+from repro.runtime.train import LoopConfig, TrainLoop, run_with_restarts
+
+LM100M = ArchConfig(
+    name="lm-100m", family="dense", num_layers=12, d_model=512,
+    num_heads=8, num_kv_heads=8, d_ff=2048, vocab_size=50_304,
+    dtype="float32",
+)
+LM25M = ArchConfig(
+    name="lm-25m", family="dense", num_layers=8, d_model=256,
+    num_heads=8, num_kv_heads=8, d_ff=1024, vocab_size=16_384,
+    dtype="float32",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true",
+                    help="~25M CPU-friendly preset (default: ~100M)")
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--fail-at-step", type=int, default=None)
+    ap.add_argument("--peak-lr", type=float, default=6e-4)
+    args = ap.parse_args()
+
+    cfg = LM25M if args.small else LM100M
+    seq = args.seq_len or (128 if args.small else 256)
+    gb = args.global_batch or (8 if args.small else 8)
+    ckpt_dir = args.ckpt_dir or f"/tmp/repro_{cfg.name}"
+    n_params = cfg.param_count()
+    print(f"model: {n_params/1e6:.1f}M params ({cfg.num_layers}L d{cfg.d_model}) "
+          f"seq {seq} batch {gb}")
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                      global_batch=gb, seed=0)
+
+    def make_loop(attempt: int) -> TrainLoop:
+        lc = LoopConfig(steps=args.steps, ckpt_every=max(args.steps // 3, 10),
+                        ckpt_dir=ckpt_dir, log_every=20,
+                        peak_lr=args.peak_lr, warmup=min(50, args.steps // 4),
+                        fail_at_step=args.fail_at_step if attempt == 0 else None)
+        return TrainLoop(cfg, data, lc)
+
+    metrics = run_with_restarts(make_loop)
+    losses = metrics.losses
+    k = min(20, max(len(losses) // 5, 1))
+    print(f"\nfirst-{k} mean loss {np.mean(losses[:k]):.3f} → "
+          f"last-{k} mean loss {np.mean(losses[-k:]):.3f}")
+    print(f"step time p50 {np.percentile(metrics.step_times, 50)*1e3:.0f} ms; "
+          f"straggler events at {metrics.straggler_events}; "
+          f"restored_from={metrics.restored_from}")
+    if len(losses) >= 40:
+        assert np.mean(losses[-k:]) < np.mean(losses[:k]), "no learning signal?"
+        print("loss decreased — data pipeline, model, optimizer, checkpointing OK")
+
+
+if __name__ == "__main__":
+    main()

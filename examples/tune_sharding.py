@@ -1,0 +1,51 @@
+"""Tune a production distribution config with the paper's BO engine.
+
+The black-box objective is a 256-chip dry-run COMPILE (~30–120 s per
+evaluation on this host): the tuner proposes (remat, q-chunking, logits
+chunk, ZeRO-3 on/off, ...), a subprocess lowers+compiles the cell against
+the production mesh, and the roofline step time comes back — or INVALID when
+the config doesn't compile or doesn't fit HBM. This is the paper's problem
+(expensive, discrete, constrained, invalid-laden) at datacenter scale.
+
+  PYTHONPATH=src python examples/tune_sharding.py \
+      --arch internlm2-1.8b --shape train_4k --budget 10
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.runner import run_strategy
+from repro.core.strategies import make_strategy
+from repro.core.strategies.bo import BOConfig, BOStrategy
+from repro.core.tuning_targets import DryRunObjective
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--budget", type=int, default=10)
+    ap.add_argument("--init", type=int, default=5)
+    ap.add_argument("--strategy", default="advanced_multi")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    obj = DryRunObjective(args.arch, args.shape, args.mesh)
+    print(obj.space.describe())
+    print(f"budget {args.budget} compiles (cached in results/tune_cache)\n")
+
+    strat = BOStrategy(BOConfig(acquisition=args.strategy,
+                                initial_samples=args.init))
+    res = run_strategy(strat, obj, budget=args.budget, seed=args.seed,
+                       checkpoint_path="results/tune_cache/"
+                       f"journal_{args.arch}_{args.shape}.json", resume=True)
+    print(f"\nbest distribution config: {obj.space.config(res.best_idx)}")
+    print(f"roofline step time: {res.best_value:.3f} s "
+          f"({res.unique_evals} unique compiles)")
+
+
+if __name__ == "__main__":
+    main()

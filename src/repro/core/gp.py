@@ -1,0 +1,135 @@
+"""Gaussian-process surrogate in pure JAX (paper §III-B).
+
+Matérn covariance with a FIXED lengthscale (the paper's key choice for
+discontinuous spaces: lengthscale fitting is disrupted by discontinuities,
+so ν=3/2 with ℓ=2.0 — or ℓ=1.5 under contextual variance — per Table I).
+
+Static-shape design: observations are padded to ``max_obs`` with a mask, so
+``fit`` and ``predict`` compile once per tuning run and are re-used for all
+~220 iterations. ``predict`` evaluates EVERY candidate — the paper optimizes
+the acquisition function by exhaustive prediction over the discrete space,
+not by gradient ascent (§III-G). ``repro.kernels.matern_gp`` provides the
+Pallas TPU kernel for this exhaustive-prediction hot loop; this module is the
+jnp oracle and the CPU execution path.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SQRT3 = math.sqrt(3.0)
+SQRT5 = math.sqrt(5.0)
+
+
+def kernel_fn(name: str, r: jax.Array, ell: float) -> jax.Array:
+    """Covariance as a function of Euclidean distance r (outputscale 1)."""
+    s = r / ell
+    if name == "matern12":
+        return jnp.exp(-s)
+    if name == "matern32":
+        t = SQRT3 * s
+        return (1.0 + t) * jnp.exp(-t)
+    if name == "matern52":
+        t = SQRT5 * s
+        return (1.0 + t + (5.0 / 3.0) * jnp.square(s)) * jnp.exp(-t)
+    if name == "rbf":
+        return jnp.exp(-0.5 * jnp.square(s))
+    raise ValueError(f"unknown kernel {name!r}")
+
+
+def _pairwise_dist(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(N,d),(M,d) -> (N,M) Euclidean distances, numerically safe."""
+    d2 = (jnp.sum(a * a, 1)[:, None] + jnp.sum(b * b, 1)[None, :]
+          - 2.0 * (a @ b.T))
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+class GPState(NamedTuple):
+    X: jax.Array        # (max_obs, d) padded observation inputs
+    y: jax.Array        # (max_obs,)   padded observations (raw scale)
+    mask: jax.Array     # (max_obs,)   True where real
+    chol: jax.Array     # (max_obs, max_obs) Cholesky of masked K + noise
+    alpha: jax.Array    # (max_obs,)   K^{-1}(y - mean)
+    y_mean: jax.Array   # ()
+    y_std: jax.Array    # ()
+    n: jax.Array        # () int32 — number of real observations
+
+
+@partial(jax.jit, static_argnames=("kernel", "ell", "noise"))
+def gp_fit(X: jax.Array, y: jax.Array, mask: jax.Array, *,
+           kernel: str = "matern32", ell: float = 2.0,
+           noise: float = 1e-6) -> GPState:
+    """Fit on padded observations. Padding rows become unit rows in K."""
+    mf = mask.astype(jnp.float32)
+    n = jnp.maximum(mf.sum(), 1.0)
+    y_mean = jnp.sum(y * mf) / n
+    var = jnp.sum(jnp.square(y - y_mean) * mf) / n
+    y_std = jnp.sqrt(jnp.maximum(var, 1e-12))
+    yc = (y - y_mean) / y_std * mf
+
+    r = _pairwise_dist(X, X)
+    K = kernel_fn(kernel, r, ell)
+    mm = mf[:, None] * mf[None, :]
+    eye = jnp.eye(X.shape[0], dtype=K.dtype)
+    K = K * mm + (1.0 - mm) * eye * 0.0
+    # padding rows/cols -> identity so the Cholesky stays PD
+    K = K + eye * (noise + (1.0 - mf))
+    chol = jnp.linalg.cholesky(K)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), yc)
+    return GPState(X=X, y=y, mask=mask, chol=chol, alpha=alpha,
+                   y_mean=y_mean, y_std=y_std, n=mf.sum().astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("kernel", "ell"))
+def gp_predict(state: GPState, Xc: jax.Array, *, kernel: str = "matern32",
+               ell: float = 2.0) -> Tuple[jax.Array, jax.Array]:
+    """Posterior mean/std over candidates Xc (M,d) — the exhaustive pass."""
+    mf = state.mask.astype(jnp.float32)
+    r = _pairwise_dist(Xc, state.X)
+    Ks = kernel_fn(kernel, r, ell) * mf[None, :]          # (M, max_obs)
+    mu = Ks @ state.alpha * state.y_std + state.y_mean
+    v = jax.scipy.linalg.solve_triangular(state.chol, Ks.T, lower=True)
+    var = 1.0 - jnp.sum(jnp.square(v), axis=0)
+    var = jnp.maximum(var, 1e-12)
+    return mu, jnp.sqrt(var) * state.y_std
+
+
+class GP:
+    """Stateful wrapper: padded buffers + incremental add + predict."""
+
+    def __init__(self, dim: int, max_obs: int, kernel: str = "matern32",
+                 ell: float = 2.0, noise: float = 1e-6):
+        self.dim = dim
+        self.max_obs = max_obs
+        self.kernel = kernel
+        self.ell = ell
+        self.noise = noise
+        self.X = jnp.zeros((max_obs, dim), jnp.float32)
+        self.y = jnp.zeros((max_obs,), jnp.float32)
+        self.mask = jnp.zeros((max_obs,), bool)
+        self.n = 0
+        self.state: GPState | None = None
+
+    def add(self, x, y_val: float):
+        if self.n >= self.max_obs:
+            return  # budget guard; caller controls budgets
+        self.X = self.X.at[self.n].set(jnp.asarray(x, jnp.float32))
+        self.y = self.y.at[self.n].set(float(y_val))
+        self.mask = self.mask.at[self.n].set(True)
+        self.n += 1
+        self.state = None
+
+    def fit(self) -> GPState:
+        self.state = gp_fit(self.X, self.y, self.mask, kernel=self.kernel,
+                            ell=self.ell, noise=self.noise)
+        return self.state
+
+    def predict(self, Xc) -> Tuple[jax.Array, jax.Array]:
+        if self.state is None:
+            self.fit()
+        return gp_predict(self.state, jnp.asarray(Xc, jnp.float32),
+                          kernel=self.kernel, ell=self.ell)

@@ -1,0 +1,115 @@
+"""Incremental exact GP for exhaustive discrete acquisition (beyond-paper).
+
+The paper optimizes the acquisition function by predicting EVERY discrete
+candidate each iteration and notes in its conclusion that reducing this cost
+is future work. This module does exactly that, with no approximation:
+
+Keep V = L^{-1} K(X_obs, X_cand) (t × N) and ssq_j = Σ_i V_ij² incrementally.
+Adding observation x_{t+1} costs O(t² + t·N) instead of recomputing the full
+O(t²·N) triangular solve: one bordered-Cholesky row, one V row.
+
+    posterior mean   μ = y_mean + y_std · Vᵀ w,   w = L^{-1} (y-ȳ)/σ_y
+    posterior var    σ² = 1 - ssq                (unit prior variance)
+
+For a 220-evaluation run over a ~18k-config space this is ~100× less work
+than the padded-recompute approach (measured in benchmarks/kernel_bench.py).
+Numerically identical to ``repro.core.gp.GP`` — asserted in tests — which
+remains the jittable JAX oracle; ``repro.kernels.matern_gp`` is the Pallas
+TPU kernel for the same V-row update + scoring hot loop.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+SQRT3 = math.sqrt(3.0)
+SQRT5 = math.sqrt(5.0)
+
+
+def kernel_np(name: str, r: np.ndarray, ell: float) -> np.ndarray:
+    s = r / ell
+    if name == "matern12":
+        return np.exp(-s)
+    if name == "matern32":
+        t = SQRT3 * s
+        return (1.0 + t) * np.exp(-t)
+    if name == "matern52":
+        t = SQRT5 * s
+        return (1.0 + t + (5.0 / 3.0) * np.square(s)) * np.exp(-t)
+    if name == "rbf":
+        return np.exp(-0.5 * np.square(s))
+    raise ValueError(name)
+
+
+class IncrementalGP:
+    """Exact GP posterior over a FIXED candidate set, incremental in t."""
+
+    def __init__(self, candidates: np.ndarray, max_obs: int,
+                 kernel: str = "matern32", ell: float = 2.0,
+                 noise: float = 1e-6):
+        self.Xc = np.ascontiguousarray(candidates, np.float64)   # (N, d)
+        self.N, self.dim = self.Xc.shape
+        self.kernel = kernel
+        self.ell = ell
+        self.noise = noise
+        self.max_obs = max_obs
+        self.L = np.zeros((max_obs, max_obs))
+        self.V = np.zeros((max_obs, self.N))
+        self.ssq = np.zeros(self.N)
+        self.X = np.zeros((max_obs, self.dim))
+        self.y = np.zeros(max_obs)
+        self.t = 0
+
+    # -- incremental update --------------------------------------------------
+    def add(self, x, y_val: float):
+        if self.t >= self.max_obs:
+            return
+        x = np.asarray(x, np.float64)
+        t = self.t
+        if t > 0:
+            r = np.sqrt(np.maximum(
+                np.sum((self.X[:t] - x[None, :]) ** 2, axis=1), 0.0))
+            k_obs = kernel_np(self.kernel, r, self.ell)
+            # forward substitution via the stored triangular factor
+            l = np.linalg.solve(self.L[:t, :t], k_obs)
+        else:
+            l = np.zeros(0)
+        d2 = 1.0 + self.noise - float(l @ l)
+        d = math.sqrt(max(d2, 1e-12))
+        self.L[t, :t] = l
+        self.L[t, t] = d
+
+        rc = np.sqrt(np.maximum(
+            np.sum((self.Xc - x[None, :]) ** 2, axis=1), 0.0))
+        k_cand = kernel_np(self.kernel, rc, self.ell)
+        v = (k_cand - l @ self.V[:t]) / d
+        self.V[t] = v
+        self.ssq += v * v
+        self.X[t] = x
+        self.y[t] = y_val
+        self.t = t + 1
+
+    # -- posterior over all candidates ----------------------------------------
+    def predict(self) -> Tuple[np.ndarray, np.ndarray]:
+        t = self.t
+        if t == 0:
+            return np.zeros(self.N), np.ones(self.N)
+        yv = self.y[:t]
+        y_mean = float(yv.mean())
+        y_std = float(yv.std())
+        if y_std < 1e-12:
+            y_std = 1.0
+        w = np.linalg.solve(self.L[:t, :t], (yv - y_mean) / y_std)
+        mu = y_mean + y_std * (w @ self.V[:t])
+        var = np.maximum(1.0 - self.ssq, 1e-12)
+        return mu, np.sqrt(var) * y_std
+
+    @property
+    def y_std(self) -> float:
+        t = self.t
+        if t == 0:
+            return 1.0
+        s = float(self.y[:t].std())
+        return s if s > 1e-12 else 1.0

@@ -1,0 +1,171 @@
+"""Tuning runner: budget accounting, caching, checkpoint/resume, metrics.
+
+Budget semantics follow the paper: a budget of UNIQUE function evaluations
+(20 initial + 200 optimization by default). Re-visits are served from cache
+and don't consume budget (Kernel Tuner reports averages per configuration, so
+"there is little practical need to revisit"). Invalid evaluations DO consume
+budget — they cost real compile/run time on hardware.
+
+Fault tolerance: the run journal (every observation, in order) is serialized
+after each evaluation when a checkpoint path is given; `resume` replays the
+journal through the cache so a killed tuning run continues losslessly —
+the same property the paper's simulation mode exploits, required here for
+cluster-scale objectives (a dry-run compile job can take minutes).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.objectives import Objective
+
+
+class BudgetExhausted(Exception):
+    pass
+
+
+@dataclass
+class Observation:
+    idx: Optional[int]          # None for configs outside the space
+    key: str                    # unique key (space idx or config repr)
+    value: float                # NaN = invalid
+    af: Optional[str] = None    # acquisition function that proposed it
+    t: float = 0.0
+
+
+class TuningRun:
+    def __init__(self, objective: Objective, budget: int,
+                 max_total_calls: Optional[int] = None,
+                 checkpoint_path: Optional[str] = None):
+        self.objective = objective
+        self.space = objective.space
+        self.budget = budget
+        self.max_total_calls = max_total_calls or budget * 50
+        self.checkpoint_path = checkpoint_path
+        self.cache: Dict[str, float] = {}
+        self.journal: List[Observation] = []
+        self.evaluated_idx: Dict[int, float] = {}
+        self.total_calls = 0
+        self.t0 = time.time()
+
+    # -- core evaluation ----------------------------------------------------
+    @property
+    def unique_evals(self) -> int:
+        return len(self.cache)
+
+    def _record(self, key: str, idx: Optional[int], value: float,
+                af: Optional[str]):
+        self.cache[key] = value
+        if idx is not None:
+            self.evaluated_idx[idx] = value
+        self.journal.append(Observation(idx, key, value, af,
+                                        time.time() - self.t0))
+        if self.checkpoint_path:
+            self._checkpoint()
+
+    def evaluate(self, idx: int, af: Optional[str] = None) -> float:
+        key = str(int(idx))
+        self.total_calls += 1
+        if key in self.cache:
+            if self.total_calls > self.max_total_calls:
+                raise BudgetExhausted
+            return self.cache[key]
+        if self.unique_evals >= self.budget:
+            raise BudgetExhausted
+        value = self.objective(int(idx))
+        self._record(key, int(idx), value, af)
+        return value
+
+    def evaluate_config(self, cfg: Dict[str, Any], af: Optional[str] = None) -> float:
+        """For constraint-unaware baselines proposing raw config dicts."""
+        idx = self.space.index_of(cfg)
+        if idx is not None:
+            return self.evaluate(idx, af)
+        key = "cfg:" + json.dumps(cfg, sort_keys=True, default=str)
+        self.total_calls += 1
+        if key in self.cache:
+            if self.total_calls > self.max_total_calls:
+                raise BudgetExhausted
+            return self.cache[key]
+        if self.unique_evals >= self.budget:
+            raise BudgetExhausted
+        self._record(key, None, math.nan, af)   # outside restricted space
+        return math.nan
+
+    # -- results ------------------------------------------------------------
+    def best(self) -> Tuple[Optional[int], float]:
+        best_idx, best_val = None, math.inf
+        for idx, v in self.evaluated_idx.items():
+            if math.isfinite(v) and v < best_val:
+                best_idx, best_val = idx, v
+        return best_idx, best_val
+
+    def best_trace(self) -> np.ndarray:
+        """best-so-far value after each unique evaluation (inf until a valid)."""
+        out = np.empty(len(self.journal))
+        cur = math.inf
+        for i, o in enumerate(self.journal):
+            if math.isfinite(o.value) and o.value < cur:
+                cur = o.value
+            out[i] = cur
+        return out
+
+    # -- fault tolerance ----------------------------------------------------
+    def _checkpoint(self):
+        tmp = self.checkpoint_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"objective": self.objective.name,
+                       "budget": self.budget,
+                       "journal": [[o.idx, o.key, o.value, o.af] for o in self.journal]},
+                      f)
+        os.replace(tmp, self.checkpoint_path)
+
+    def resume(self) -> int:
+        """Replay a journal written by a previous (killed) run. Returns #replayed."""
+        if not self.checkpoint_path or not os.path.exists(self.checkpoint_path):
+            return 0
+        with open(self.checkpoint_path) as f:
+            data = json.load(f)
+        for idx, key, value, af in data["journal"]:
+            self.cache[key] = value
+            if idx is not None:
+                self.evaluated_idx[idx] = value
+            self.journal.append(Observation(idx, key, value, af))
+        return len(data["journal"])
+
+
+@dataclass
+class TuneResult:
+    strategy: str
+    objective: str
+    best_idx: Optional[int]
+    best_value: float
+    trace: np.ndarray
+    unique_evals: int
+    wall_time_s: float
+    journal: List[Observation] = field(default_factory=list)
+
+
+def run_strategy(strategy, objective: Objective, budget: int,
+                 seed: int = 0, checkpoint_path: Optional[str] = None,
+                 resume: bool = False) -> TuneResult:
+    run = TuningRun(objective, budget, checkpoint_path=checkpoint_path)
+    if resume:
+        run.resume()
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    try:
+        strategy.run(run, rng)
+    except BudgetExhausted:
+        pass
+    best_idx, best_val = run.best()
+    return TuneResult(strategy=strategy.name, objective=objective.name,
+                      best_idx=best_idx, best_value=best_val,
+                      trace=run.best_trace(), unique_evals=run.unique_evals,
+                      wall_time_s=time.time() - t0, journal=run.journal)

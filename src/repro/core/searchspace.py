@@ -1,0 +1,142 @@
+"""Discrete, constrained, normalized search spaces (paper §III-D).
+
+The paper's representation decisions, reproduced exactly:
+  * mixed-type parameters (ints, floats, strings, bools) — each parameter is
+    an *ordered* list of values (the user is responsible for the ordering);
+  * every numerical input is normalized "in a linear fashion" onto [0, 1] by
+    ordinal position, which removes the distance distortion of non-linear
+    value sets (powers of two etc.) and gives categorical values an integer
+    encoding (§III-D1);
+  * constraints ("restrictions") filter the Cartesian product up front;
+  * runtime-invalid configurations are a property of the *objective*, not the
+    space — the tuner discovers them (§III-D2).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Param:
+    name: str
+    values: Tuple[Any, ...]
+
+    def __post_init__(self):
+        assert len(self.values) >= 1
+
+
+Constraint = Callable[[Dict[str, Any]], bool]
+
+
+class SearchSpace:
+    """Enumerated constrained space with ordinal-normalized coordinates."""
+
+    def __init__(self, params: Sequence[Param],
+                 constraints: Sequence[Constraint] = (),
+                 name: str = "space", max_enumeration: int = 2_000_000):
+        self.name = name
+        self.params: Tuple[Param, ...] = tuple(params)
+        self.constraints = tuple(constraints)
+        cart = math.prod(len(p.values) for p in self.params)
+        if cart > max_enumeration:
+            raise ValueError(f"{name}: cartesian product {cart} too large to enumerate")
+        self.cartesian_size = cart
+
+        cols = []
+        for idx_tuple in itertools.product(*[range(len(p.values)) for p in self.params]):
+            cols.append(idx_tuple)
+        idx = np.asarray(cols, dtype=np.int32)
+        if self.constraints:
+            keep = np.ones(len(idx), dtype=bool)
+            for i, row in enumerate(idx):
+                cfgd = {p.name: p.values[row[j]] for j, p in enumerate(self.params)}
+                for c in self.constraints:
+                    if not c(cfgd):
+                        keep[i] = False
+                        break
+            idx = idx[keep]
+        self.value_indices = idx                     # (N, d) int32
+        self.size = len(idx)
+        self.dim = len(self.params)
+        if self.size == 0:
+            raise ValueError(f"{name}: all configurations violate constraints")
+
+        # ordinal normalization: value j of n -> j/(n-1)  (n==1 -> 0.5)
+        denom = np.array([max(len(p.values) - 1, 1) for p in self.params],
+                         dtype=np.float32)
+        self.X_norm = idx.astype(np.float32) / denom
+        for j, p in enumerate(self.params):
+            if len(p.values) == 1:
+                self.X_norm[:, j] = 0.5
+
+        self._lookup: Dict[Tuple[int, ...], int] = {
+            tuple(row): i for i, row in enumerate(idx)}
+
+    # -- config access ------------------------------------------------------
+    def config(self, i: int) -> Dict[str, Any]:
+        row = self.value_indices[i]
+        return {p.name: p.values[row[j]] for j, p in enumerate(self.params)}
+
+    def configs(self, ids: Sequence[int]) -> List[Dict[str, Any]]:
+        return [self.config(i) for i in ids]
+
+    def index_of(self, cfg: Dict[str, Any]) -> Optional[int]:
+        try:
+            key = tuple(p.values.index(cfg[p.name]) for p in self.params)
+        except (ValueError, KeyError):
+            return None
+        return self._lookup.get(key)
+
+    # -- neighborhoods (Hamming: differ in exactly one parameter) -----------
+    def hamming_neighbors(self, i: int) -> List[int]:
+        row = self.value_indices[i]
+        out = []
+        for j, p in enumerate(self.params):
+            for v in range(len(p.values)):
+                if v == row[j]:
+                    continue
+                key = tuple(row[:j]) + (v,) + tuple(row[j + 1:])
+                k = self._lookup.get(key)
+                if k is not None:
+                    out.append(k)
+        return out
+
+    def adjacent_neighbors(self, i: int) -> List[int]:
+        """Differ in one parameter by one ordinal step (for local search)."""
+        row = self.value_indices[i]
+        out = []
+        for j in range(self.dim):
+            for dv in (-1, 1):
+                v = row[j] + dv
+                if 0 <= v < len(self.params[j].values):
+                    key = tuple(row[:j]) + (int(v),) + tuple(row[j + 1:])
+                    k = self._lookup.get(key)
+                    if k is not None:
+                        out.append(k)
+        return out
+
+    def random_index(self, rng: np.random.Generator) -> int:
+        return int(rng.integers(0, self.size))
+
+    def nearest_index(self, x_norm: np.ndarray,
+                      exclude: Optional[set] = None) -> int:
+        """Snap a [0,1]^d point to the nearest enumerated config (L2)."""
+        d2 = np.sum((self.X_norm - x_norm[None, :]) ** 2, axis=1)
+        if exclude:
+            d2 = d2.copy()
+            d2[list(exclude)] = np.inf
+        return int(np.argmin(d2))
+
+    def describe(self) -> str:
+        lines = [f"SearchSpace {self.name}: {self.size} configs "
+                 f"(cartesian {self.cartesian_size}, {self.dim} params)"]
+        for p in self.params:
+            vals = ", ".join(str(v) for v in p.values[:8])
+            more = "..." if len(p.values) > 8 else ""
+            lines.append(f"  {p.name}: [{vals}{more}] ({len(p.values)})")
+        return "\n".join(lines)

@@ -1,0 +1,253 @@
+"""The paper's five auto-tuning search spaces (Tables II/III), regenerated.
+
+We do not have the paper's recorded GPU measurements, so (per DESIGN.md §7.3)
+we reproduce the *shape of the problem*: identical parameter structure where
+recoverable, identical search-space cardinality and invalid fraction
+(trimmed/marked deterministically), and a seeded synthetic performance
+surface with the characteristics the paper describes — multimodal, strong
+parameter interactions, discontinuous cliffs, invalids clustered in
+high-resource regions, ~1% measurement noise.
+
+Per-GPU variants (gtx_titan_x / rtx_2070_super / a100) differ in seed,
+minimum, search-space trimming and invalid fraction, mirroring Table III.
+"""
+from __future__ import annotations
+
+import math
+import zlib
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+def _stable_hash(s: str) -> int:
+    """Process-independent string hash (Python's hash() is salted!)."""
+    return zlib.crc32(s.encode())
+
+from repro.core.objectives import SimulatedObjective
+from repro.core.searchspace import Param, SearchSpace
+
+GPUS = ("gtx_titan_x", "rtx_2070_super", "a100")
+_GPU_SEED = {"gtx_titan_x": 101, "rtx_2070_super": 202, "a100": 303}
+_GPU_SPEED = {"gtx_titan_x": 1.0, "rtx_2070_super": 0.55, "a100": 0.30}
+
+
+# ---------------------------------------------------------------------------
+# space definitions
+
+
+def gemm_space() -> SearchSpace:
+    """CLBlast GEMM: cartesian 82944 -> constrained (paper: 17956)."""
+    params = [
+        Param("MWG", (16, 32, 64, 128)),
+        Param("NWG", (16, 32, 64, 128)),
+        Param("KWG", (16, 32)),
+        Param("MDIMC", (8, 16, 32)),
+        Param("NDIMC", (8, 16, 32)),
+        Param("MDIMA", (8, 16, 32)),
+        Param("NDIMB", (8, 16, 32)),
+        Param("KWI", (2, 8)),
+        Param("VWM", (1, 2, 4, 8)),
+        Param("VWN", (1, 2, 4, 8)),
+        Param("STRM", (0,)),
+        Param("STRN", (0,)),
+        Param("SA", (1,)),
+        Param("SB", (1,)),
+        Param("PRECISION", (32,)),
+    ]
+    # The four CLBlast divisibility restrictions give 21316 configs; the
+    # paper's full set lands at 17956 — we trim deterministically to the
+    # exact paper size (DESIGN.md §7.3).
+    cons = [
+        lambda c: c["MWG"] % (c["MDIMC"] * c["VWM"]) == 0,
+        lambda c: c["NWG"] % (c["NDIMC"] * c["VWN"]) == 0,
+        lambda c: c["MWG"] % (c["MDIMA"] * c["VWM"]) == 0,
+        lambda c: c["NWG"] % (c["NDIMB"] * c["VWN"]) == 0,
+    ]
+    return SearchSpace(params, cons, name="gemm")
+
+
+def convolution_space(gpu: str = "gtx_titan_x") -> SearchSpace:
+    """2D convolution: cartesian 18432; constrained 9400 (Titan X) /
+    7520 (Turing/Ampere — tighter thread-count limit, Table III)."""
+    params = [
+        Param("filter_width", (15,)),
+        Param("filter_height", (15,)),
+        Param("block_size_x", tuple(range(8, 129, 8))),       # 16
+        Param("block_size_y", (1, 2, 4, 8, 16, 32)),          # 6
+        Param("tile_size_x", (1, 2, 3, 4, 5, 6)),             # 6
+        Param("tile_size_y", (1, 2, 3, 4, 5, 6, 7, 8)),       # 8
+        Param("use_padding", (0, 1)),
+        Param("read_only", (0, 1)),
+    ]
+    lim = 1024 if gpu == "gtx_titan_x" else 768
+    cons = [
+        lambda c: c["block_size_x"] * c["block_size_y"] <= lim,
+        lambda c: c["block_size_x"] * c["block_size_y"] >= 32,
+        lambda c: c["tile_size_x"] * c["tile_size_y"] <= 32,
+    ]
+    return SearchSpace(params, cons, name="convolution")
+
+
+def pnpoly_space() -> SearchSpace:
+    """Point-in-polygon: no restrictions, cartesian 8184 (31*11*4*2*3)."""
+    params = [
+        Param("block_size_x", tuple(range(32, 993, 32))),     # 31
+        Param("tile_size", tuple(range(1, 12))),              # 11
+        Param("between_method", (0, 1, 2, 3)),
+        Param("use_precomputed_slopes", (0, 1)),
+        Param("use_method", (0, 1, 2)),
+    ]
+    return SearchSpace(params, (), name="pnpoly")
+
+
+def expdist_space() -> SearchSpace:
+    """ExpDist (unseen kernel, §IV-E): 14400 configs, 50.8% invalid."""
+    params = [
+        Param("block_size_x", tuple(2 ** i for i in range(5, 11)) + (48, 96, 192, 384)),  # 10
+        Param("block_size_y", (1, 2, 4, 8, 16, 32)),          # 6
+        Param("tile_size_x", (1, 2, 4, 8)),
+        Param("tile_size_y", (1, 2, 4, 8)),
+        Param("loop_unroll_factor", (0, 1, 2, 4, 8)),
+        Param("n_y_blocks", (1, 4, 16)),
+    ]
+    return SearchSpace(params, (), name="expdist")
+
+
+def adding_space() -> SearchSpace:
+    """Adding / RTE (unseen kernel, §IV-E): 4654 configs, none invalid.
+    Unroll factors = divisors of the 140-iteration loop (paper)."""
+    params = [
+        Param("block_size_x", tuple(range(16, 513, 16))),     # 32
+        Param("block_size_y", (1, 2, 4, 8, 16, 24, 32)),      # 7
+        Param("loop_unroll_factor_2", (0, 1, 2, 4, 5, 7, 10, 14, 20, 28, 35, 70, 140)),
+        Param("recompute", (0, 1)),
+    ]
+    # cartesian 5824 -> trimmed to the paper's 4654 (DESIGN.md §7.3)
+    return SearchSpace(params, (), name="adding")
+
+
+# ---------------------------------------------------------------------------
+# synthetic performance surfaces
+
+
+def _surface(space: SearchSpace, seed: int, base_ms: float,
+             invalid_frac: float, noise: float = 0.01) -> np.ndarray:
+    """Seeded multi-modal runtime surface over the whole space.
+
+    runtime = base * Π per-param effects * Π pairwise interactions
+                   * occupancy-cliff factor * lognormal(σ=noise)
+    invalids: the top `invalid_frac` of a resource score (correlated with
+    block/tile products, so invalid configs cluster — paper §III-D2).
+    """
+    rng = np.random.default_rng(seed)
+    idx = space.value_indices.astype(np.float64)           # (N, d)
+    nvals = np.array([len(p.values) for p in space.params], np.float64)
+    u = idx / np.maximum(nvals - 1, 1)                     # ordinal in [0,1]
+
+    log_t = np.zeros(space.size)
+    # per-param effects: smooth bowl + periodic component (multimodal)
+    for j in range(space.dim):
+        if nvals[j] < 2:
+            continue
+        c = rng.uniform(0.15, 0.85)
+        a = rng.uniform(0.2, 1.2)
+        f = rng.integers(1, 4)
+        ph = rng.uniform(0, 2 * math.pi)
+        b = rng.uniform(0.05, 0.35)
+        log_t += a * (u[:, j] - c) ** 2 + b * np.sin(2 * math.pi * f * u[:, j] + ph)
+    # pairwise interactions
+    n_pairs = max(2, space.dim)
+    for _ in range(n_pairs):
+        j, k = rng.choice(space.dim, size=2, replace=False)
+        w = rng.uniform(-0.6, 0.6)
+        log_t += w * (u[:, j] - 0.5) * (u[:, k] - 0.5) * 4.0
+    # occupancy cliffs: discontinuous penalty bands on a resource score
+    res = u @ rng.uniform(0.2, 1.0, space.dim)
+    edges = np.quantile(res, rng.uniform(0.55, 0.9, size=2))
+    for e in np.sort(edges):
+        log_t += np.where(res > e, rng.uniform(0.15, 0.5), 0.0)
+    # normalize: min at 0 -> runtime floor = base_ms
+    log_t -= log_t.min()
+    times = base_ms * np.exp(log_t)
+    times *= np.exp(rng.normal(0.0, noise, space.size))
+
+    if invalid_frac > 0:
+        n_inv = int(round(invalid_frac * space.size))
+        res_noisy = res + rng.normal(0, 0.05, space.size)
+        inv = np.argsort(-res_noisy)[:n_inv]
+        times[inv] = math.nan
+    return times
+
+
+@dataclass(frozen=True)
+class PaperKernel:
+    name: str
+    space_size: Dict[str, int]      # per-GPU expected size (paper tables)
+    invalid: Dict[str, float]       # per-GPU invalid fraction
+    minimum: Dict[str, float]       # per-GPU minimum (ms), Table II/III
+
+
+PAPER_KERNELS = {
+    "gemm": PaperKernel("gemm",
+                        {"gtx_titan_x": 17956, "rtx_2070_super": 17956, "a100": 17956},
+                        {g: 0.0 for g in GPUS},
+                        {"gtx_titan_x": 28.307, "rtx_2070_super": 17.112, "a100": 8.518}),
+    "convolution": PaperKernel("convolution",
+                               {"gtx_titan_x": 9400, "rtx_2070_super": 7520, "a100": 7520},
+                               {"gtx_titan_x": 0.3855, "rtx_2070_super": 0.232, "a100": 0.232},
+                               {"gtx_titan_x": 1.625, "rtx_2070_super": 1.221, "a100": 0.739}),
+    "pnpoly": PaperKernel("pnpoly",
+                          {g: 8184 for g in GPUS},
+                          {"gtx_titan_x": 0.039, "rtx_2070_super": 0.035, "a100": 0.039},
+                          {"gtx_titan_x": 26.968, "rtx_2070_super": 12.325, "a100": 13.091}),
+    "expdist": PaperKernel("expdist", {g: 14400 for g in GPUS},
+                           {g: 0.508 for g in GPUS},
+                           {g: 33.878 for g in GPUS}),
+    "adding": PaperKernel("adding", {g: 4654 for g in GPUS},
+                          {g: 0.0 for g in GPUS},
+                          {g: 1.468 for g in GPUS}),
+}
+
+_SPACE_FNS = {
+    "gemm": lambda gpu: gemm_space(),
+    "convolution": lambda gpu: convolution_space(gpu),
+    "pnpoly": lambda gpu: pnpoly_space(),
+    "expdist": lambda gpu: expdist_space(),
+    "adding": lambda gpu: adding_space(),
+}
+
+_cache: Dict[Tuple[str, str], SimulatedObjective] = {}
+
+
+def _trim(space: SearchSpace, target: int, seed: int) -> SearchSpace:
+    """Deterministically trim an enumerated space to the paper's exact size."""
+    if space.size <= target:
+        return space
+    rng = np.random.default_rng(seed)
+    keep = np.sort(rng.choice(space.size, size=target, replace=False))
+    space.value_indices = space.value_indices[keep]
+    space.X_norm = space.X_norm[keep]
+    space.size = target
+    space._lookup = {tuple(row): i for i, row in enumerate(space.value_indices)}
+    return space
+
+
+def make_objective(kernel: str, gpu: str = "gtx_titan_x",
+                   exact_size: bool = True) -> SimulatedObjective:
+    """Simulation-mode objective for one (kernel, GPU) — paper Table II/III."""
+    key = (kernel, gpu)
+    if key in _cache:
+        return _cache[key]
+    pk = PAPER_KERNELS[kernel]
+    space = _SPACE_FNS[kernel](gpu)
+    if exact_size:
+        space = _trim(space, pk.space_size[gpu],
+                      seed=_stable_hash(kernel + gpu) % 2**31)
+    seed = _GPU_SEED[gpu] * 1000 + _stable_hash(kernel) % 997
+    times = _surface(space, seed, base_ms=pk.minimum[gpu],
+                     invalid_frac=pk.invalid[gpu])
+    obj = SimulatedObjective(space, times, name=f"{kernel}@{gpu}")
+    _cache[key] = obj
+    return obj

@@ -1,0 +1,28 @@
+"""Search strategies: the paper's BO + Kernel Tuner baselines + framework analogues."""
+from repro.core.strategies.baselines import (GeneticAlgorithm,
+                                             MultiStartLocalSearch,
+                                             RandomSearch, SimulatedAnnealing)
+from repro.core.strategies.bo import BOConfig, BOStrategy
+from repro.core.strategies.frameworks import GPHedgeSnapBO, UCBSnapBO
+
+
+def make_strategy(name: str, **kw):
+    """Factory used by benchmarks/examples/CLI."""
+    if name in ("ei", "poi", "lcb", "multi", "advanced_multi"):
+        return BOStrategy(BOConfig(acquisition=name, **kw))
+    table = {
+        "random": RandomSearch,
+        "simulated_annealing": SimulatedAnnealing,
+        "mls": MultiStartLocalSearch,
+        "genetic_algorithm": GeneticAlgorithm,
+        "bayesopt_ucb": UCBSnapBO,
+        "skopt_gphedge": GPHedgeSnapBO,
+    }
+    if name not in table:
+        raise KeyError(f"unknown strategy {name!r}")
+    return table[name](**kw)
+
+
+ALL_BO = ("ei", "multi", "advanced_multi")
+ALL_BASELINES = ("random", "simulated_annealing", "mls", "genetic_algorithm")
+ALL_FRAMEWORKS = ("bayesopt_ucb", "skopt_gphedge")

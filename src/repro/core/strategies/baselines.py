@@ -1,0 +1,143 @@
+"""Kernel Tuner baseline strategies the paper compares against (§IV-B).
+
+Random Search, Simulated Annealing, Multi-start Local Search, and a Genetic
+Algorithm — the best-performing non-BO strategies in Kernel Tuner on the test
+kernels. All operate on Hamming neighborhoods of the restricted space and see
+invalid configurations as failed evaluations (consuming budget).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.runner import BudgetExhausted, TuningRun
+
+
+class RandomSearch:
+    name = "random"
+
+    def run(self, run: TuningRun, rng: np.random.Generator):
+        order = rng.permutation(run.space.size)
+        for idx in order:
+            run.evaluate(int(idx), af="random")
+        raise BudgetExhausted
+
+
+@dataclass
+class SimulatedAnnealing:
+    """Kernel Tuner-style SA: Hamming neighbor moves, geometric cooling."""
+
+    t0: float = 1.0
+    t_min: float = 1e-3
+    alpha: float = 0.985
+    name: str = "simulated_annealing"
+
+    def run(self, run: TuningRun, rng: np.random.Generator):
+        space = run.space
+        cur = space.random_index(rng)
+        cur_v = run.evaluate(cur, af="sa")
+        guard_restarts = 0
+        while not math.isfinite(cur_v) and guard_restarts < 1000:
+            guard_restarts += 1
+            cur = space.random_index(rng)
+            cur_v = run.evaluate(cur, af="sa")
+        T = self.t0
+        scale = max(abs(cur_v), 1e-9) if math.isfinite(cur_v) else 1.0
+        while True:
+            nbrs = space.hamming_neighbors(cur)
+            if not nbrs:
+                cur = space.random_index(rng)
+                cur_v = run.evaluate(cur, af="sa")
+                continue
+            cand = int(nbrs[rng.integers(len(nbrs))])
+            cand_v = run.evaluate(cand, af="sa")
+            accept = False
+            if math.isfinite(cand_v):
+                if not math.isfinite(cur_v) or cand_v < cur_v:
+                    accept = True
+                else:
+                    delta = (cand_v - cur_v) / scale
+                    accept = rng.random() < math.exp(-delta / max(T, 1e-9))
+            if accept:
+                cur, cur_v = cand, cand_v
+            T = max(T * self.alpha, self.t_min)
+
+
+@dataclass
+class MultiStartLocalSearch:
+    """Greedy best-improvement hill-climbing on Hamming neighborhoods,
+    restarted from random configs until the budget runs out."""
+
+    name: str = "mls"
+
+    def run(self, run: TuningRun, rng: np.random.Generator):
+        space = run.space
+        while True:
+            cur = space.random_index(rng)
+            cur_v = run.evaluate(cur, af="mls")
+            if not math.isfinite(cur_v):
+                continue
+            improved = True
+            while improved:
+                improved = False
+                best_n, best_v = None, cur_v
+                for n in space.hamming_neighbors(cur):
+                    v = run.evaluate(int(n), af="mls")
+                    if math.isfinite(v) and v < best_v:
+                        best_n, best_v = int(n), v
+                if best_n is not None:
+                    cur, cur_v = best_n, best_v
+                    improved = True
+
+
+@dataclass
+class GeneticAlgorithm:
+    """Tournament GA with uniform crossover and per-gene mutation."""
+
+    pop_size: int = 20
+    mutation_rate: float = 0.1
+    tournament: int = 3
+    elitism: int = 2
+    name: str = "genetic_algorithm"
+
+    def run(self, run: TuningRun, rng: np.random.Generator):
+        space = run.space
+        nvals = [len(p.values) for p in space.params]
+
+        def fitness_of(idx: int) -> float:
+            v = run.evaluate(idx, af="ga")
+            return v if math.isfinite(v) else math.inf
+
+        pop: List[int] = [space.random_index(rng) for _ in range(self.pop_size)]
+        fit = [fitness_of(i) for i in pop]
+
+        def tournament_pick() -> int:
+            best, best_f = None, math.inf
+            for _ in range(self.tournament):
+                j = int(rng.integers(self.pop_size))
+                if fit[j] <= best_f:
+                    best, best_f = pop[j], fit[j]
+            return best if best is not None else pop[0]
+
+        while True:
+            order = np.argsort(fit)
+            new_pop = [pop[i] for i in order[:self.elitism]]
+            while len(new_pop) < self.pop_size:
+                p1 = space.value_indices[tournament_pick()]
+                p2 = space.value_indices[tournament_pick()]
+                mask = rng.random(space.dim) < 0.5
+                child = np.where(mask, p1, p2).astype(np.int64)
+                for g in range(space.dim):
+                    if rng.random() < self.mutation_rate:
+                        child[g] = rng.integers(nvals[g])
+                idx = space._lookup.get(tuple(int(c) for c in child))
+                if idx is None:
+                    # repair: nearest valid config to the infeasible child
+                    x = child / np.array([max(n - 1, 1) for n in nvals])
+                    idx = space.nearest_index(x.astype(np.float32))
+                new_pop.append(int(idx))
+            pop = new_pop
+            fit = [fitness_of(i) for i in pop]

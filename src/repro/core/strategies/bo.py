@@ -1,0 +1,178 @@
+"""The paper's Bayesian Optimization search strategy (§III).
+
+Structure (paper's contributions all present):
+  * discrete normalized search space; acquisition optimized ONLY over
+    not-yet-evaluated configs by exhaustive prediction (no BFGS);
+  * invalid observations consume budget but are never fitted to the GP;
+  * maximin-LHS initial sample with random repair of invalid draws;
+  * Matérn-3/2 GP, fixed lengthscale 2.0 (1.5 under contextual variance);
+  * exploration factor: constant or Contextual Variance;
+  * acquisition: ei | poi | lcb | multi | advanced_multi (Table I defaults).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import acquisition as A
+from repro.core.gp import GP
+from repro.core.gp_fast import IncrementalGP
+from repro.core.lhs import initial_sample
+from repro.core.runner import BudgetExhausted, TuningRun
+
+
+@dataclass(frozen=True)
+class BOConfig:
+    acquisition: str = "advanced_multi"   # ei|poi|lcb|multi|advanced_multi
+    kernel: str = "matern32"
+    lengthscale: float = 2.0
+    lengthscale_cv: float = 1.5
+    exploration: object = "cv"            # "cv" or a float
+    initial_samples: int = 20
+    maximin: bool = True
+    skip_threshold: int = 5
+    improvement_factor: float = 0.1
+    discount: Optional[float] = None      # None -> per-mode Table I default
+    af_order: Sequence[str] = ("ei", "poi", "lcb")
+    noise: float = 1e-6
+    # "fast": incremental-Cholesky exact GP (beyond-paper, ~100x less work);
+    # "jax": padded jit GP (the oracle; also what the Pallas kernel mirrors)
+    engine: str = "fast"
+
+
+class _EngineAdapter:
+    """Uniform .add / .predict_all / .y_std over both GP engines."""
+
+    def __init__(self, cfg: BOConfig, X_cand: np.ndarray, max_obs: int, ell: float):
+        self.jax_mode = cfg.engine == "jax"
+        self.X_cand = X_cand
+        if self.jax_mode:
+            self.gp = GP(X_cand.shape[1], max_obs=max_obs, kernel=cfg.kernel,
+                         ell=ell, noise=cfg.noise)
+        else:
+            self.gp = IncrementalGP(X_cand, max_obs=max_obs, kernel=cfg.kernel,
+                                    ell=ell, noise=cfg.noise)
+
+    def add(self, x, y):
+        self.gp.add(x, y)
+
+    def predict_all(self):
+        if self.jax_mode:
+            mu, sigma = self.gp.predict(self.X_cand)
+            return np.asarray(mu, np.float64), np.asarray(sigma, np.float64)
+        return self.gp.predict()
+
+    @property
+    def y_std(self) -> float:
+        if self.jax_mode:
+            self.gp.fit() if self.gp.state is None else None
+            return float(self.gp.state.y_std)
+        return self.gp.y_std
+
+
+class BOStrategy:
+    def __init__(self, cfg: BOConfig = BOConfig(), name: Optional[str] = None):
+        self.cfg = cfg
+        self.name = name or f"bo_{cfg.acquisition}"
+
+    # -----------------------------------------------------------------
+    def run(self, run: TuningRun, rng: np.random.Generator):
+        cfg = self.cfg
+        space = run.space
+        ell = (cfg.lengthscale_cv if cfg.exploration == "cv"
+               else cfg.lengthscale)
+        gp = _EngineAdapter(cfg, space.X_norm, max_obs=run.budget, ell=ell)
+        evaluated = np.zeros(space.size, dtype=bool)
+
+        def observe(idx: int, value: float):
+            evaluated[idx] = True
+            if math.isfinite(value):
+                gp.add(space.X_norm[idx], value)
+
+        # resume support: absorb any journal replayed into the run
+        for o in run.journal:
+            if o.idx is not None:
+                observe(o.idx, o.value)
+
+        # ---- initial sample (LHS maximin + random repair) ----
+        n_init = max(cfg.initial_samples - int(evaluated.sum()), 0)
+        init_vals = []
+        if n_init > 0:
+            for idx in initial_sample(space, n_init, rng, maximin=cfg.maximin):
+                v = run.evaluate(idx, af="init")
+                observe(idx, v)
+                if math.isfinite(v):
+                    init_vals.append(v)
+            # paper: replace invalid draws with random samples until all valid
+            guard = 0
+            while len(init_vals) < n_init and guard < 20 * n_init:
+                guard += 1
+                idx = space.random_index(rng)
+                if evaluated[idx]:
+                    continue
+                v = run.evaluate(idx, af="init")
+                observe(idx, v)
+                if math.isfinite(v):
+                    init_vals.append(v)
+        else:
+            init_vals = [o.value for o in run.journal if math.isfinite(o.value)]
+        if not init_vals:  # pathological space: no valid init found
+            init_vals = [1.0]
+        mu_s = float(np.mean(init_vals))
+
+        _, sigma0 = gp.predict_all()
+        var_s = float(np.mean(np.square(np.asarray(sigma0))))
+
+        # ---- acquisition controller ----
+        mode = cfg.acquisition
+        controller = None
+        if mode in ("multi", "advanced_multi"):
+            controller = A.MultiAcquisition(
+                mode="advanced" if mode == "advanced_multi" else "multi",
+                order=cfg.af_order, skip_threshold=cfg.skip_threshold,
+                improvement_factor=cfg.improvement_factor,
+                discount=cfg.discount)
+
+        # ---- optimization loop ----
+        while True:
+            mu, sigma = gp.predict_all()
+            _, f_best = run.best()
+            if not math.isfinite(f_best):
+                f_best = mu_s
+            y_std = gp.y_std
+
+            if cfg.exploration == "cv":
+                explore = A.contextual_variance(sigma[~evaluated], f_best,
+                                                mu_s, var_s)
+            else:
+                explore = float(cfg.exploration)
+
+            def pick(af_name: str) -> int:
+                scores = A.af_scores(af_name, mu, sigma, f_best, explore, y_std)
+                scores = np.where(evaluated, -np.inf, scores)
+                return int(np.argmax(scores))
+
+            if controller is None:
+                idx = pick(mode)
+                v = run.evaluate(idx, af=mode)
+                observe(idx, v)
+            elif controller.mode == "multi":
+                noms = {a.name: pick(a.name) for a in controller.active_afs()}
+                controller.register_duplicates(noms)
+                af = controller.next_af()
+                idx = noms.get(af.name, pick(af.name))
+                v = run.evaluate(idx, af=af.name)
+                observe(idx, v)
+                controller.record(af, v, math.isfinite(v))
+            else:  # advanced multi: only the evaluating AF predicts
+                af = controller.next_af()
+                idx = pick(af.name)
+                v = run.evaluate(idx, af=af.name)
+                observe(idx, v)
+                controller.record(af, v, math.isfinite(v))
+
+            if bool(evaluated.all()):
+                raise BudgetExhausted

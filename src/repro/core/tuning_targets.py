@@ -1,0 +1,160 @@
+"""Distribution-config auto-tuning target (the beyond-paper integration).
+
+The objective is a MULTI-POD DRY-RUN COMPILE: a (sharding rules, remat,
+microbatch, chunking, capacity...) configuration is lowered + compiled
+against the production mesh in a subprocess, and the roofline step time
+(max of compute/memory/collective terms, repro.launch.roofline) is returned.
+Configs that fail to compile, or whose per-device memory exceeds HBM, are
+INVALID — giving the exact problem shape of the paper (expensive black box,
+discrete constrained space, runtime-discovered invalids) at datacenter scale.
+
+Evaluations take ~20–120 s of XLA compile each, so results are cached on
+disk keyed by (arch, shape, mesh, config) and runs are resumable through the
+tuner journal (repro.core.runner).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+import os
+import subprocess
+import sys
+from typing import Any, Dict, List, Optional
+
+from repro.core.objectives import Objective
+from repro.core.searchspace import Param, SearchSpace
+from repro.launch.roofline import HBM_BYTES
+
+REPO = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+
+
+def sharding_space(arch: str, shape: str) -> SearchSpace:
+    """Distribution knobs applicable to the given cell."""
+    params = [
+        Param("remat", ("none", "dots", "full")),
+        Param("attn_q_chunks", (1, 2, 4)),
+        Param("logits_chunk", (512, 2048, 8192)),
+        Param("attn_block_kv", (512, 1024, 2048)),
+        Param("flash", (1, 0)),   # 1: blockwise flash; 0: direct attention
+    ]
+    if shape == "train_4k":
+        params.append(Param("opt_moment_dtype", ("float32", "bfloat16")))
+        params.append(Param("microbatches", (1, 2, 4)))
+    if arch.startswith(("deepseek", "qwen3")):
+        params.append(Param("capacity_factor", (1.0, 1.25, 1.5)))
+        params.append(Param("experts_rule", ("model", "model+data")))
+    if arch.startswith("xlstm"):
+        params.append(Param("mlstm_chunk", (0, 32, 64, 128)))
+    params.append(Param("embed_rule", ("data", "none")))  # ZeRO-3 on/off
+    return SearchSpace(params, (), name=f"sharding[{arch}×{shape}]")
+
+
+def _config_args(cfg: Dict[str, Any]) -> List[str]:
+    args = []
+    if cfg.get("remat") and cfg["remat"] != "none":
+        args += ["--remat", cfg["remat"]]
+    if cfg.get("attn_q_chunks", 1) != 1:
+        args += ["--q-chunks", str(cfg["attn_q_chunks"])]
+    if cfg.get("microbatches", 1) != 1:
+        args += ["--microbatches", str(cfg["microbatches"])]
+    if cfg.get("capacity_factor"):
+        args += ["--capacity-factor", str(cfg["capacity_factor"])]
+    if cfg.get("logits_chunk") is not None:
+        args += ["--logits-chunk", str(cfg["logits_chunk"])]
+    if cfg.get("attn_block_kv"):
+        args += ["--attn-block-kv", str(cfg["attn_block_kv"])]
+    if cfg.get("opt_moment_dtype"):
+        args += ["--opt-moment-dtype", cfg["opt_moment_dtype"]]
+    if cfg.get("flash", 1) == 0:
+        args += ["--no-flash"]
+    if cfg.get("mlstm_chunk"):
+        args += ["--mlstm-chunk", str(cfg["mlstm_chunk"])]
+    rules = []
+    if cfg.get("experts_rule") == "model+data":
+        rules.append("experts=model+data")
+    if cfg.get("embed_rule") == "none":
+        rules.append("embed=None")
+    if rules:
+        args += ["--rules", ",".join(rules)]
+    return args
+
+
+class DryRunObjective(Objective):
+    """step-time (s) of the compiled cell under a distribution config."""
+
+    def __init__(self, arch: str, shape: str, mesh: str = "single",
+                 cache_dir: str = "results/tune_cache",
+                 check_hbm: bool = True, timeout_s: int = 2400,
+                 repo_root: Optional[str] = None, verbose: bool = True):
+        self.arch, self.shape, self.mesh = arch, shape, mesh
+        self.space = sharding_space(arch, shape)
+        self.cache_dir = cache_dir
+        self.check_hbm = check_hbm
+        self.timeout_s = timeout_s
+        self.verbose = verbose
+        self.root = repo_root or os.path.abspath(REPO)
+        self.name = f"dryrun[{arch}×{shape}×{mesh}]"
+        os.makedirs(os.path.join(self.root, cache_dir), exist_ok=True)
+
+    def _cache_key(self, cfg: Dict[str, Any]) -> str:
+        blob = json.dumps([self.arch, self.shape, self.mesh, cfg], sort_keys=True)
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+    def record_for(self, cfg: Dict[str, Any]) -> Optional[Dict]:
+        path = os.path.join(self.root, self.cache_dir,
+                            self._cache_key(cfg) + ".json")
+        tagdir = os.path.join(self.root, self.cache_dir,
+                              self._cache_key(cfg) + ".d")
+        if os.path.exists(path):
+            with open(path) as f:
+                return json.load(f)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", self.arch, "--shape", self.shape,
+               "--mesh", self.mesh, "--out", tagdir,
+               "--tag", "tune"] + _config_args(cfg)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(self.root, "src")
+        env.pop("XLA_FLAGS", None)
+        try:
+            subprocess.run(cmd, cwd=self.root, env=env, timeout=self.timeout_s,
+                           capture_output=True, text=True)
+        except subprocess.TimeoutExpired:
+            rec = {"status": "timeout"}
+            with open(path, "w") as f:
+                json.dump(rec, f)
+            return rec
+        out = os.path.join(tagdir,
+                           f"tune__{self.arch}__{self.shape}__{self.mesh}.json")
+        if not os.path.exists(out):
+            rec = {"status": "crash"}
+        else:
+            with open(out) as f:
+                rec = json.load(f)
+        with open(path, "w") as f:
+            json.dump(rec, f)
+        return rec
+
+    def __call__(self, idx: int) -> float:
+        cfg = self.space.config(idx)
+        rec = self.record_for(cfg)
+        if rec.get("status") != "ok":
+            if self.verbose:
+                print(f"  [tune] {cfg} -> INVALID ({rec.get('status')})")
+            return math.nan
+        if self.check_hbm:
+            mem = rec.get("memory", {})
+            live = mem.get("argument_size_in_bytes", 0) + mem.get(
+                "temp_size_in_bytes", 0)
+            if live > HBM_BYTES:
+                if self.verbose:
+                    print(f"  [tune] {cfg} -> INVALID "
+                          f"(HBM {live/2**30:.1f} GiB > 16 GiB)")
+                return math.nan
+        t = rec["roofline"]["step_time"]
+        if self.verbose:
+            rf = rec["roofline"]
+            print(f"  [tune] {cfg} -> {t:.3f}s "
+                  f"(c={rf['t_compute']:.2f} m={rf['t_memory']:.2f} "
+                  f"x={rf['t_collective']:.2f})")
+        return float(t)

@@ -1,0 +1,70 @@
+"""Tiled GEMM Pallas TPU kernel — the paper's GEMM tuning target, TPU-native.
+
+The CLBlast OpenCL GEMM the paper tunes exposes thread-block/vector-width
+parameters; the TPU re-parameterization (DESIGN.md §2) is MXU tile shapes:
+(block_m, block_n, block_k) must satisfy VMEM capacity and 128-alignment —
+misconfigured tiles are the TPU analogue of the paper's invalid
+configurations. `repro.kernels.ops.gemm_config_space()` exposes this as a
+BO search space.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm(a: jax.Array, b: jax.Array, *, block_m: int = 256,
+         block_n: int = 256, block_k: int = 256,
+         interpret: bool = False) -> jax.Array:
+    """C = A @ B with explicit VMEM tiling. A (M,K), B (K,N)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        f"dims ({M},{N},{K}) not divisible by blocks "
+        f"({block_m},{block_n},{block_k})")
+    k_steps = K // block_k
+    grid = (M // block_m, N // block_n, k_steps)
+
+    kw = {}
+    if not interpret:
+        kw["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+        **kw,
+    )(a, b)
+
+
+def gemm_vmem_bytes(block_m: int, block_n: int, block_k: int,
+                    dtype_bytes: int = 2) -> int:
+    """VMEM working set: A+B tiles (dtype) + fp32 accumulator + C tile."""
+    return (block_m * block_k + block_k * block_n) * dtype_bytes \
+        + block_m * block_n * 4 + block_m * block_n * dtype_bytes

@@ -1,0 +1,123 @@
+"""Jit'd wrappers + tunable config spaces for the Pallas kernels.
+
+On non-TPU backends the kernels run in interpret mode (the kernel body
+executes in Python on CPU) — the TPU is the TARGET, interpret is the
+validation path. Each kernel exposes a SearchSpace whose invalid region is
+the TPU resource model (VMEM capacity, MXU alignment): the exact structure
+the paper tunes on GPUs, re-parameterized for TPU (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.searchspace import Param, SearchSpace
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gemm as _gemm
+from repro.kernels import matern_gp as _mgp
+from repro.launch.roofline import VMEM_BYTES
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# -- GEMM ---------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def gemm(a, b, block_m=256, block_n=256, block_k=256, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _gemm.gemm(a, b, block_m=block_m, block_n=block_n,
+                      block_k=block_k, interpret=interpret)
+
+
+def gemm_config_space(M: int = 1024, N: int = 1024, K: int = 1024) -> SearchSpace:
+    """BO target: MXU tile shapes. Invalid = VMEM overflow / misalignment
+    (checked by the objective, not the constraints — runtime invalids)."""
+    vals = (64, 128, 256, 512, 1024)
+    params = [Param("block_m", vals), Param("block_n", vals),
+              Param("block_k", vals)]
+    cons = [lambda c: M % c["block_m"] == 0,
+            lambda c: N % c["block_n"] == 0,
+            lambda c: K % c["block_k"] == 0]
+    return SearchSpace(params, cons, name="pallas_gemm")
+
+
+def gemm_valid(cfg: Dict, dtype_bytes: int = 2) -> bool:
+    return _gemm.gemm_vmem_bytes(cfg["block_m"], cfg["block_n"],
+                                 cfg["block_k"], dtype_bytes) <= VMEM_BYTES
+
+
+# -- flash attention -----------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv", "causal",
+                                             "interpret"))
+def flash_attention(q, k, v, block_q=512, block_kv=512, causal=True,
+                    interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _fa.flash_attention(q, k, v, block_q=block_q, block_kv=block_kv,
+                               causal=causal, interpret=interpret)
+
+
+def flash_config_space(S: int = 4096) -> SearchSpace:
+    vals = (128, 256, 512, 1024, 2048)
+    params = [Param("block_q", vals), Param("block_kv", vals)]
+    cons = [lambda c: S % c["block_q"] == 0, lambda c: S % c["block_kv"] == 0]
+    return SearchSpace(params, cons, name="pallas_flash")
+
+
+def flash_valid(cfg: Dict, hd: int = 128, dtype_bytes: int = 2) -> bool:
+    return _fa.flash_vmem_bytes(cfg["block_q"], cfg["block_kv"], hd,
+                                dtype_bytes) <= VMEM_BYTES
+
+
+# -- Matérn GP posterior ---------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("ell", "nu", "block_n", "interpret"))
+def gp_posterior(x_cand, x_obs, vinv_rows, w, mask, ell=2.0, nu="matern32",
+                 block_n=512, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _mgp.gp_posterior(x_cand, x_obs, vinv_rows, w, mask, ell=ell,
+                             nu=nu, block_n=block_n, interpret=interpret)
+
+
+def gp_inputs_from_incremental(gp, pad_T: Optional[int] = None):
+    """Package an IncrementalGP state as padded kernel inputs."""
+    t = gp.t
+    T = pad_T or max(128, 1 << (t - 1).bit_length())
+    d = gp.dim
+    x_obs = np.zeros((T, d), np.float32)
+    x_obs[:t] = gp.X[:t]
+    # invert the Cholesky factor in float64 — GP kernel matrices are
+    # ill-conditioned and an fp32 inverse loses ~1% of the posterior mean
+    L = np.eye(T, dtype=np.float64)
+    L[:t, :t] = gp.L[:t, :t]
+    vinv = np.linalg.inv(L).astype(np.float32)
+    vinv[t:, :] = 0.0
+    vinv[:, t:] = 0.0
+    yv = gp.y[:t]
+    y_mean, y_std = float(yv.mean()), max(float(yv.std()), 1e-12)
+    w = np.zeros(T, np.float32)
+    w[:t] = np.linalg.solve(gp.L[:t, :t], (yv - y_mean) / y_std)
+    mask = np.zeros(T, np.float32)
+    mask[:t] = 1.0
+    return x_obs, vinv, w, mask, y_mean, y_std
+
+
+def gp_config_space(N: int = 16384) -> SearchSpace:
+    vals = (128, 256, 512, 1024, 2048, 4096)
+    params = [Param("block_n", vals)]
+    return SearchSpace(params, [lambda c: N % c["block_n"] == 0],
+                       name="pallas_matern_gp")

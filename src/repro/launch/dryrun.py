@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and only the dry-run) builds the 512-chip production meshes
+# out of placeholder host devices; smoke tests / benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the distribution config is coherent (sharding
+propagation succeeds, the collectives exist, memory fits) and extracts the
+roofline terms (EXPERIMENTS.md §Dry-run / §Roofline):
+  * compiled.memory_analysis()  — bytes/device
+  * compiled.cost_analysis()    — HLO FLOPs / bytes
+  * HLO text                    — collective bytes (repro.launch.hlo)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k \
+      --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.arch import SHAPES_BY_NAME, shape_applicable
+from repro.configs.registry import ARCHS, get_arch
+from repro.launch import hlo as hlo_mod
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import Roofline, model_flops_for
+from repro.launch.specs import input_specs
+from repro.models.stepfn import make_decode_step, make_prefill_step, make_train_step
+from repro.optim.optimizers import AdamW, constant_lr
+from repro.parallel.sharding import ParallelConfig, ShardCtx
+
+
+def _pcfg_from_args(args) -> ParallelConfig:
+    kw = {}
+    if args.remat:
+        kw["remat"] = args.remat
+    if args.q_chunks:
+        kw["attn_q_chunks"] = args.q_chunks
+    if args.microbatches:
+        kw["microbatches"] = args.microbatches
+    if args.capacity_factor:
+        kw["capacity_factor"] = args.capacity_factor
+    if args.logits_chunk is not None:
+        kw["logits_chunk"] = args.logits_chunk
+    if args.attn_block_kv:
+        kw["attn_block_kv"] = args.attn_block_kv
+    if getattr(args, "opt_moment_dtype", None):
+        kw["opt_moment_dtype"] = args.opt_moment_dtype
+    if getattr(args, "no_flash", False):
+        kw["flash_threshold"] = 1 << 30
+    if getattr(args, "mlstm_chunk", None):
+        kw["mlstm_chunk"] = args.mlstm_chunk
+    if getattr(args, "mlstm_bf16", False):
+        kw["mlstm_bf16_streams"] = True
+    if getattr(args, "moe_combine", None):
+        kw["moe_combine"] = args.moe_combine
+    if args.rules:
+        # "act_cache_seq=model,embed=None" style overrides
+        pr = dict(ParallelConfig().param_rules)
+        ar = dict(ParallelConfig().act_rules)
+        for item in args.rules.split(","):
+            k, v = item.split("=")
+            tgt = None if v in ("None", "none", "") else (tuple(v.split("+")) if "+" in v else v)
+            (ar if k.startswith("act_") else pr)[k] = tgt
+        kw["param_rules"] = pr
+        kw["act_rules"] = ar
+    return ParallelConfig(**kw)
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             pcfg: ParallelConfig | None = None, save_hlo: str | None = None) -> dict:
+    """Lower+compile one cell; returns the §Dry-run record."""
+    cfg = get_arch(arch_name)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skip", "reason": why}
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.devices.size
+    pcfg = pcfg or ParallelConfig()
+    px = ShardCtx(mesh=mesh, pcfg=pcfg)
+    t0 = time.time()
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+           "chips": int(chips), "pcfg": {k: str(v) for k, v in
+                                         dataclasses.asdict(pcfg).items()}}
+    try:
+        if shape.kind == "train":
+            opt = AdamW(schedule=constant_lr(1e-4), moment_dtype=pcfg.opt_moment_dtype)
+            step_fn = make_train_step(cfg, px, opt)
+            specs = input_specs(cfg, shape, mesh, pcfg, optimizer=opt)
+            jfn = jax.jit(step_fn, donate_argnums=(0, 1))
+            lowered = jfn.lower(specs["params"], specs["opt_state"],
+                                specs["batch"], specs["step"])
+        elif shape.kind == "prefill":
+            step_fn = make_prefill_step(cfg, px, cache_cap=shape.seq_len)
+            specs = input_specs(cfg, shape, mesh, pcfg)
+            jfn = jax.jit(step_fn)
+            lowered = jfn.lower(specs["params"], specs["batch"])
+        else:
+            step_fn = make_decode_step(cfg, px)
+            specs = input_specs(cfg, shape, mesh, pcfg)
+            jfn = jax.jit(step_fn, donate_argnums=(1,))
+            lowered = jfn.lower(specs["params"], specs["cache"],
+                                specs["batch"], specs["pos"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        if save_hlo:
+            Path(save_hlo).write_text(hlo_text)
+
+        # Trip-count-aware analysis (XLA's cost_analysis counts scan bodies
+        # once — see hlo_cost.py); everything is per-device → ×chips = global.
+        ana = hlo_cost.analyze(hlo_text, dcn_stride=256 if multi else None)
+        mf = model_flops_for(cfg, shape)
+        roof = Roofline(flops=ana["flops"] * chips, hbm_bytes=ana["bytes"] * chips,
+                        coll_bytes=ana["coll_bytes"] * chips,
+                        dcn_bytes=ana["dcn_bytes"] * chips,
+                        chips=chips, model_flops=mf)
+        mem_attrs = {}
+        for a in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes",
+                  "alias_size_in_bytes", "peak_memory_in_bytes"):
+            v = getattr(mem, a, None)
+            if v is not None:
+                mem_attrs[a] = int(v)
+        rec.update({
+            "status": "ok",
+            "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+            "memory": mem_attrs,
+            "xla_cost_analysis": {k: float(v) for k, v in cost.items()
+                                  if isinstance(v, (int, float)) and "{" not in k},
+            "coll_by_kind": ana["coll_by_kind"],
+            "top_scopes": ana["top_scopes"],
+            "top_bytes_scopes": ana["top_bytes_scopes"],
+            "roofline": roof.to_dict(),
+            "hlo_bytes_len": len(hlo_text),
+            "while_trip_counts": hlo_mod.count_while_trip_counts(hlo_text)[:8],
+        })
+        print(f"[dryrun] {arch_name} × {shape_name} × {mesh_kind}: OK "
+              f"compile={t_compile:.1f}s dominant={roof.dominant} "
+              f"t=({roof.t_compute:.4f},{roof.t_memory:.4f},{roof.t_collective:.4f})s")
+    except Exception as e:  # noqa: BLE001 — a failing cell is a *finding*
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+        print(f"[dryrun] {arch_name} × {shape_name} × {mesh_kind}: "
+              f"FAIL {type(e).__name__}: {e}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--q-chunks", dest="q_chunks", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--capacity-factor", dest="capacity_factor", type=float, default=None)
+    ap.add_argument("--logits-chunk", dest="logits_chunk", type=int, default=None)
+    ap.add_argument("--attn-block-kv", dest="attn_block_kv", type=int, default=None)
+    ap.add_argument("--opt-moment-dtype", dest="opt_moment_dtype", default=None)
+    ap.add_argument("--no-flash", dest="no_flash", action="store_true")
+    ap.add_argument("--mlstm-chunk", dest="mlstm_chunk", type=int, default=None)
+    ap.add_argument("--mlstm-bf16", dest="mlstm_bf16", action="store_true")
+    ap.add_argument("--moe-combine", dest="moe_combine", default=None,
+                    choices=["gather", "a2a"])
+    ap.add_argument("--rules", default=None, help="logical=mesh overrides, comma-sep")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    pcfg = _pcfg_from_args(args)
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES_BY_NAME) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    for a, s, m in cells:
+        fname = outdir / f"{args.tag}__{a}__{s}__{m}.json"
+        rec = run_cell(a, s, m, pcfg, save_hlo=args.save_hlo)
+        fname.write_text(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

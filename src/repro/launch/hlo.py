@@ -1,0 +1,118 @@
+"""HLO text analysis: collective bytes, per-op breakdown, DCN detection.
+
+``cost_analysis()`` gives FLOPs and memory bytes but not collective traffic;
+we parse the compiled HLO and sum operand sizes of every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute),
+looking operand shapes up in a symbol table built from instruction results.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)")
+_OPERAND_RE = re.compile(r"(%[\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string, incl. tuple types."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, dcn_stride: Optional[int] = None
+                      ) -> Dict[str, Dict[str, float]]:
+    """Returns {op_kind: {count, bytes, dcn_bytes}}.
+
+    bytes = operand bytes entering the collective (the traffic the ICI/DCN
+    must carry, up to the algorithm's constant factor). A collective whose
+    replica group contains ids differing by >= dcn_stride is counted as DCN.
+    """
+    # pass 1: symbol table of result types
+    sizes: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if m:
+            sizes[m.group(1)] = shape_bytes(m.group(2))
+
+    out: Dict[str, Dict[str, float]] = defaultdict(lambda: {"count": 0, "bytes": 0.0,
+                                                            "dcn_bytes": 0.0})
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if not m:
+            continue
+        name, rtype, op = m.groups()
+        kind = None
+        for c in COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        # operand bytes: look up names inside the parens after the op name
+        paren = ln[ln.find(op) + len(op):]
+        depth = 0
+        arglist = ""
+        for ch in paren:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                arglist += ch
+        op_bytes = sum(sizes.get(nm, 0) for nm in _OPERAND_RE.findall(arglist))
+        if op_bytes == 0:
+            op_bytes = shape_bytes(rtype)
+        is_dcn = False
+        if dcn_stride:
+            g = _GROUPS_RE.search(ln)
+            if g:
+                for grp in g.group(1).split("},{"):
+                    ids = [int(t) for t in re.findall(r"\d+", grp)]
+                    if ids and max(ids) - min(ids) >= dcn_stride:
+                        is_dcn = True
+                        break
+        rec = out[kind]
+        rec["count"] += 1
+        rec["bytes"] += op_bytes
+        if is_dcn:
+            rec["dcn_bytes"] += op_bytes
+    return dict(out)
+
+
+def total_collective_bytes(stats: Dict[str, Dict[str, float]]) -> Tuple[float, float]:
+    tot = sum(v["bytes"] for v in stats.values())
+    dcn = sum(v["dcn_bytes"] for v in stats.values())
+    return tot, dcn
+
+
+def count_while_trip_counts(hlo_text: str):
+    """Extract (trip_count hints) from while loops if annotated."""
+    return re.findall(r'known_trip_count\\?["\']?\s*:?\s*\{\\?["\']?n\\?["\']?\s*[:=]\s*\\?["\']?(\d+)', hlo_text)

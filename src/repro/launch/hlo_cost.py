@@ -1,0 +1,450 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any model
+that scans over layers (every serious model here) is undercounted by ~depth×,
+and collectives inside the scan are likewise undercounted. This module parses
+the post-optimization HLO text and computes
+    flops, memory bytes, collective bytes (ICI + DCN split)
+compositionally: fusions recurse into their called computation for FLOPs but
+count one kernel's worth of memory traffic; ``while`` multiplies body+cond by
+``known_trip_count``; collectives sum *operand* bytes times their trip factor.
+
+Also produces a by-op_name attribution (top FLOPs contributors) used by the
+§Perf hillclimbing loop.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?"?n"?\s*[:=]\s*"?(\d+)"?')
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,{} ]*)\}\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+_FREE_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    rtype: str
+    op: str
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.dcn_bytes += other.dcn_bytes * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+
+
+def parse_instr(line: str) -> Optional[Tuple[str, str, str]]:
+    """(name, result_type, op) — robust to tuple types with /*index=N*/ comments."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):         # tuple type: scan balanced parens
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        rtype = rest[:i + 1]
+        rest = rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype = rest[:sp]
+        rest = rest[sp:]
+    om = re.match(r"\s+([\w\-]+)\(", rest)
+    if not om:
+        return None
+    return name, rtype, om.group(1)
+
+
+def _parse_operands(line: str, op: str) -> List[str]:
+    i = line.find(op + "(")
+    if i < 0:
+        return []
+    s = line[i + len(op):]
+    depth = 0
+    arg = ""
+    for ch in s:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            arg += ch
+    return re.findall(r"(%[\w.\-]+)", arg)
+
+
+def _groups_span_dcn(line: str, dcn_stride: int) -> bool:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(t) for t in re.findall(r"\d+", grp)]
+            if ids and (max(ids) // dcn_stride) != (min(ids) // dcn_stride):
+                return True
+        return False
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims)))
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",")]
+            ids = ids.reshape(dims).transpose(perm).reshape(-1)
+        groups = ids.reshape(g, s)
+        pods = groups // dcn_stride
+        return bool((pods.max(axis=1) != pods.min(axis=1)).any())
+    return False
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, dcn_stride: Optional[int] = None):
+        self.dcn_stride = dcn_stride
+        self.comps: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self.by_scope: Dict[str, float] = defaultdict(float)
+        self.bytes_by_scope: Dict[str, float] = defaultdict(float)
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        self.roots: Dict[str, Instr] = {}
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_RE.match(line.strip()) if line.strip().endswith("{") else None
+                if m and "=" not in line.split("(")[0]:
+                    cur = m.group(1)
+                    if line.lstrip().startswith("ENTRY"):
+                        self.entry = cur
+                    self.comps[cur] = []
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            parsed = parse_instr(line)
+            if parsed:
+                name, rtype, op = parsed
+                ins = Instr(name, rtype, op, _parse_operands(line, op), line)
+                self.comps[cur].append(ins)
+                if line.lstrip().startswith("ROOT"):
+                    self.roots[cur] = ins
+
+    # -- cost of one computation (memoized) --------------------------------
+    def comp_cost(self, comp: str, scope_mult: float = 1.0) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        instrs = self.comps.get(comp, [])
+        sizes = {i.name: shape_bytes(i.rtype) for i in instrs}
+        total = Cost()
+        for ins in instrs:
+            c = self._instr_cost(ins, sizes)
+            total.add(c)
+        self._memo[comp] = total
+        return total
+
+    def _instr_cost(self, ins: Instr, sizes: Dict[str, int]) -> Cost:
+        op = ins.op
+        c = Cost()
+        if op in _FREE_OPS:
+            return c
+        if op == "while":
+            body = _BODY_RE.search(ins.line)
+            cond = _COND_RE.search(ins.line)
+            trip = 1
+            tm = _TRIP_RE.search(ins.line)
+            if tm:
+                trip = int(tm.group(1))
+            sub = Cost()
+            if body:
+                sub.add(self.comp_cost(body.group(1)))
+            if cond:
+                sub.add(self.comp_cost(cond.group(1)))
+            c.add(sub, mult=trip)
+            self._scope(ins, c.flops, c.bytes)
+            return c
+        if op == "fusion":
+            callee = _CALLS_RE.search(ins.line)
+            root_op = None
+            touch: Dict[int, Optional[int]] = {}
+            if callee:
+                cname = callee.group(1)
+                inner = self.comp_cost(cname)
+                c.flops += inner.flops          # compute executes
+                c.coll_bytes += inner.coll_bytes
+                c.dcn_bytes += inner.dcn_bytes
+                root = self.roots.get(cname)
+                root_op = root.op if root else None
+                touch = self._param_touch(cname)
+            opnd = [sizes.get(o, 0) for o in ins.operands]
+            res = shape_bytes(ins.rtype)
+            # operand j consumed ONLY through dynamic-slice inside the callee
+            # touches slice-sized windows, not the whole buffer (stacked
+            # scan inputs / stacked layer weights)
+            eff = []
+            for j, b in enumerate(opnd):
+                t = touch.get(j, None)
+                eff.append(min(b, t) if t is not None else b)
+            if root_op == "dynamic-update-slice" and opnd:
+                # in-place loop-carried buffer update: the result aliases the
+                # largest operand; traffic = small operands + update write
+                big = max(eff) if eff else 0
+                c.bytes += 2 * (sum(eff) - big)
+            else:
+                c.bytes += sum(eff) + res
+            self._scope(ins, c.flops, c.bytes)
+            return c
+        if op in ("call", "async-start", "async-done"):
+            callee = _CALLS_RE.search(ins.line) or re.search(r"to_apply=(%[\w.\-]+)", ins.line)
+            if callee:
+                c.add(self.comp_cost(callee.group(1)))
+            return c
+        if op == "conditional":
+            branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                  r"(?:true|false)_computation=(%[\w.\-]+))", ins.line)
+            names: List[str] = []
+            for a, b in branches:
+                if a:
+                    names += re.findall(r"(%[\w.\-]+)", a)
+                if b:
+                    names.append(b)
+            if names:
+                worst = max((self.comp_cost(n) for n in names),
+                            key=lambda x: x.flops + x.bytes, default=Cost())
+                c.add(worst)
+            return c
+
+        # In-place buffer ops: XLA updates loop-carried buffers in place, so
+        # a dynamic-update-slice moves only the update slice (NOT the whole
+        # stacked residual buffer — counting that is O(trip²) for scans), and
+        # a dynamic-slice reads only the slice it produces.
+        if op == "dynamic-update-slice":
+            upd = sizes.get(ins.operands[1], 0) if len(ins.operands) > 1 else 0
+            c.bytes += 2 * upd
+            return c
+        if op == "dynamic-slice":
+            c.bytes += 2 * shape_bytes(ins.rtype)
+            return c
+        if op == "gather":
+            # touched bytes ≈ gathered rows + indices, not the whole table
+            idx = sizes.get(ins.operands[1], 0) if len(ins.operands) > 1 else 0
+            c.bytes += 2 * shape_bytes(ins.rtype) + idx
+            return c
+        if op == "scatter":
+            # in-place: read+write updates + indices; result aliases target
+            small = sum(sizes.get(o, 0) for o in ins.operands[1:])
+            c.bytes += 2 * small
+            return c
+
+        op_bytes = sum(sizes.get(o, 0) for o in ins.operands) + shape_bytes(ins.rtype)
+        kind = next((k for k in COLLECTIVES
+                     if op == k or op == k + "-start" or op == k + "-done"), None)
+        if kind is not None:
+            if op.endswith("-done"):
+                return c
+            in_bytes = sum(sizes.get(o, 0) for o in ins.operands) or shape_bytes(ins.rtype)
+            c.bytes += op_bytes
+            c.coll_bytes += in_bytes
+            c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0.0) + in_bytes
+            if self.dcn_stride and _groups_span_dcn(ins.line, self.dcn_stride):
+                c.dcn_bytes += in_bytes
+            return c
+        c.bytes += op_bytes
+        if op == "dot":
+            contract = 1
+            mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+            if mm and ins.operands:
+                lhs_dims = self._operand_dims(ins.operands[0], sizes)
+                for di in mm.group(1).split(","):
+                    if di != "" and lhs_dims and int(di) < len(lhs_dims):
+                        contract *= lhs_dims[int(di)]
+            c.flops += 2.0 * shape_elems(ins.rtype) * contract
+            self._scope(ins, c.flops)
+            return c
+        if op == "convolution":
+            kd = self._operand_dims(ins.operands[1], sizes) if len(ins.operands) > 1 else []
+            kelems = int(np.prod(kd)) if kd else 1
+            out = shape_elems(ins.rtype)
+            ofeat = kd[-1] if kd else 1
+            c.flops += 2.0 * out * max(kelems // max(ofeat, 1), 1)
+            self._scope(ins, c.flops)
+            return c
+        if op in ("reduce", "reduce-window"):
+            c.flops += sum(sizes.get(o, 0) for o in ins.operands) / 4.0
+            return c
+        if op in ("custom-call",):
+            # e.g. Pallas kernels / oneDNN matmul: FLOPs not inferable from
+            # the call site — documented undercount (DESIGN.md §6).
+            return c
+        # default: elementwise-ish, 1 flop per output element
+        c.flops += shape_elems(ins.rtype)
+        return c
+
+    _dims_cache: Dict[Tuple[str, int], List[int]] = {}
+
+    def _operand_dims(self, name: str, sizes: Dict[str, int]) -> List[int]:
+        # find the instruction line that defined `name` in any computation
+        # (names are unique module-wide in optimized HLO)
+        dims = self._dims_lookup.get(name)
+        return dims or []
+
+    @property
+    def _dims_lookup(self) -> Dict[str, List[int]]:
+        if not hasattr(self, "_dims_lookup_cache"):
+            lut: Dict[str, List[int]] = {}
+            for instrs in self.comps.values():
+                for i in instrs:
+                    lut[i.name] = _first_shape_dims(i.rtype)
+            self._dims_lookup_cache = lut
+        return self._dims_lookup_cache
+
+    _touch_memo: Dict[str, Dict[int, Optional[int]]]
+
+    def _param_touch(self, comp: str) -> Dict[int, Optional[int]]:
+        """Per fusion-parameter: bytes actually touched, or None = all.
+
+        A parameter whose only consumers are dynamic-slice ops is read
+        slice-by-slice; its effective traffic is the sum of slice sizes.
+        """
+        if not hasattr(self, "_touch_memo_d"):
+            self._touch_memo_d = {}
+        if comp in self._touch_memo_d:
+            return self._touch_memo_d[comp]
+        out: Dict[int, Optional[int]] = {}
+        instrs = self.comps.get(comp, [])
+        params = []
+        for i in instrs:
+            if i.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", i.line)
+                if m:
+                    params.append((int(m.group(1)), i))
+        for idx, p in params:
+            consumers = [i for i in instrs if p.name in i.operands]
+            if consumers and all(i.op == "dynamic-slice" and i.operands
+                                 and i.operands[0] == p.name
+                                 for i in consumers):
+                out[idx] = sum(shape_bytes(i.rtype) for i in consumers)
+            else:
+                out[idx] = None
+        self._touch_memo_d[comp] = out
+        return out
+
+    def _scope(self, ins: Instr, flops: float, byts: float = 0.0):
+        m = _META_RE.search(ins.line)
+        if m:
+            parts = [p for p in m.group(1).split("/") if p and not p.startswith("jit(")]
+            key = "/".join(parts[-3:]) if parts else "(root)"
+        else:
+            key = "(no-meta)"
+        if flops > 0:
+            self.by_scope[key] += flops
+        if byts > 0:
+            self.bytes_by_scope[key] += byts
+
+    # -- public -------------------------------------------------------------
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+    def top_scopes(self, n: int = 12) -> List[Tuple[str, float]]:
+        return sorted(self.by_scope.items(), key=lambda kv: -kv[1])[:n]
+
+    def top_bytes_scopes(self, n: int = 12) -> List[Tuple[str, float]]:
+        return sorted(self.bytes_by_scope.items(), key=lambda kv: -kv[1])[:n]
+
+
+def analyze(hlo_text: str, dcn_stride: Optional[int] = None) -> Dict:
+    model = HloCostModel(hlo_text, dcn_stride=dcn_stride)
+    t = model.total()
+    return {
+        "flops": t.flops, "bytes": t.bytes,
+        "coll_bytes": t.coll_bytes, "dcn_bytes": t.dcn_bytes,
+        "coll_by_kind": dict(t.coll_by_kind),
+        "top_scopes": model.top_scopes(),
+        "top_bytes_scopes": model.top_bytes_scopes(),
+    }

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+A FUNCTION (never module-level) so importing this module never touches jax
+device state. Single pod: v5e-256 as (data=16, model=16). Multi-pod: 2 pods
+= 512 chips as (pod=2, data=16, model=16); the `pod` axis crosses DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+
+import math
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)} "
+            "(the dry-run launcher forces XLA_FLAGS=--xla_force_host_platform_device_count=512)")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over locally available (or forced-host) devices, for tests."""
+    axes, shape = [], []
+    if pod > 1:
+        axes.append("pod"); shape.append(pod)
+    axes += ["data", "model"]
+    shape += [data, model]
+    n = math.prod(shape)
+    import numpy as np
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), tuple(axes))

@@ -1,0 +1,94 @@
+"""TPU v5e roofline model (targets; this container only compiles).
+
+Terms per the assignment:
+  compute    = HLO_FLOPs      / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes      / (chips * HBM_BW)
+  collective = collective_B   / (chips * ICI_BW)   (DCN portion / DCN_BW)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+DCN_BW = 6.25e9         # ~50 Gbit/s per host NIC (documented assumption)
+VMEM_BYTES = 16 * 2**20  # ~16 MiB usable more-or-less per core
+HBM_BYTES = 16 * 2**30   # v5e HBM capacity
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    dcn_bytes: float
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        ici = (self.coll_bytes - self.dcn_bytes) / (self.chips * ICI_BW)
+        dcn = self.dcn_bytes / (self.chips * DCN_BW)
+        return ici + dcn
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap upper bound: max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if self.model_flops and self.flops:
+            return self.model_flops / self.flops
+        return None
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS-based MFU bound at the roofline step time."""
+        if not self.model_flops:
+            return None
+        t = self.step_time
+        if t <= 0:
+            return None
+        return self.model_flops / (t * self.chips * PEAK_FLOPS)
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "dcn_bytes": self.dcn_bytes,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "step_time": self.step_time,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) for train; 2·N·D for inference."""
+    n = cfg.active_param_count() if cfg.moe is not None else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n * tokens

@@ -1,0 +1,175 @@
+"""Sharded optimizers: AdamW and Adafactor, plus LR schedules.
+
+State trees mirror the parameter tree (same structure, same shardings), so
+GSPMD shards optimizer state exactly like ZeRO-3. ``abstract_state`` builds
+ShapeDtypeStructs for the dry-run without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (step + 1) / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return schedule
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+@dataclass(frozen=True)
+class AdamW:
+    schedule: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params):
+        md = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, md)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def abstract_state(self, param_structs):
+        md = jnp.dtype(self.moment_dtype)
+
+        def like(p):
+            sh = getattr(p, "sharding", None)
+            if sh is not None:
+                return jax.ShapeDtypeStruct(p.shape, md, sharding=sh)
+            return jax.ShapeDtypeStruct(p.shape, md)
+
+        return {"mu": jax.tree.map(like, param_structs),
+                "nu": jax.tree.map(like, param_structs),
+                "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        if self.clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        lr = self.schedule(state["count"])
+        bc1 = 1 - self.b1 ** cf
+        bc2 = 1 - self.b2 ** cf
+        md = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu32 = self.b1 * mu.astype(jnp.float32) + (1 - self.b1) * g32
+            nu32 = self.b2 * nu.astype(jnp.float32) + (1 - self.b2) * jnp.square(g32)
+            step = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return new_p, mu32.astype(md), nu32.astype(md)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_state = {"mu": treedef.unflatten([o[1] for o in out]),
+                     "nu": treedef.unflatten([o[2] for o in out]),
+                     "count": count}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    """Factored second-moment optimizer (memory: ~1 fp32 scalar per row+col)."""
+
+    schedule: Callable[[jax.Array], jax.Array]
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def _factored(self, shape) -> bool:
+        return len(shape) >= 2
+
+    def init(self, params):
+        def one(p):
+            if self._factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(one, params), "count": jnp.zeros((), jnp.int32)}
+
+    def abstract_state(self, param_structs):
+        def one(p):
+            if self._factored(p.shape):
+                return {"vr": jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32),
+                        "vc": jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jax.ShapeDtypeStruct(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(one, param_structs,
+                                  is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+                "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        lr = self.schedule(state["count"])
+        beta = 1.0 - cf ** (-self.decay)
+
+        def upd(p, g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + self.eps
+            if self._factored(p.shape):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], self.eps))
+                upd_ = g32 * jax.lax.rsqrt(denom + self.eps)
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                nv = beta * v["v"] + (1 - beta) * g2
+                upd_ = g32 * jax.lax.rsqrt(nv + self.eps)
+                new_v = {"v": nv}
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + 1e-12)
+            upd_ = upd_ / jnp.maximum(1.0, rms / self.clip_threshold)
+            new_p = p.astype(jnp.float32) - lr * (upd_ + self.weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), new_v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_state = {"v": treedef.unflatten([o[1] for o in out]), "count": count}
+        return new_params, new_state, {"lr": lr}
+
+
+def make_optimizer(name: str, schedule, moment_dtype: str = "float32"):
+    if name == "adamw":
+        return AdamW(schedule=schedule, moment_dtype=moment_dtype)
+    if name == "adafactor":
+        return Adafactor(schedule=schedule)
+    raise ValueError(name)

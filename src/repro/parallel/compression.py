@@ -1,0 +1,85 @@
+"""Gradient compression for the DCN (pod) axis.
+
+At 2+ pods the inter-pod all-reduce crosses DCN (~6 GB/s/host vs 50 GB/s ICI
+links); compressing the pod-axis gradient exchange is the standard lever.
+Two schemes, both under shard_map on the `pod` axis:
+
+  * int8 stochastic-rounding quantized all-reduce (8x fewer DCN bytes,
+    unbiased);
+  * top-k sparsification with ERROR FEEDBACK (residual carried to the next
+    step — converges like dense SGD for k as low as 1-5%).
+
+These operate on the DP-replicated gradient after the intra-pod reduction;
+`repro.runtime.train.TrainLoop` wires them in when
+ParallelConfig.grad_compression != "none".
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_allreduce(g: jax.Array, axis_name: str, key: jax.Array) -> jax.Array:
+    """Unbiased int8-quantized psum over `axis_name`.
+
+    The scale must be SHARED across ranks (Σᵢ qᵢ·sᵢ ≠ (Σᵢ qᵢ)·s̄ for per-rank
+    scales), so one scalar pmax precedes the int8 payload exchange.
+    """
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name)
+    scale = gmax / 127.0 + 1e-12
+    # decorrelate dither across ranks or it sums coherently instead of
+    # cancelling ~1/sqrt(n)
+    key = jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+    noise = jax.random.uniform(key, g.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(g / scale + noise), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return total.astype(jnp.float32) * scale / n
+
+
+def topk_error_feedback(g: jax.Array, residual: jax.Array, axis_name: str,
+                        k_frac: float = 0.05) -> Tuple[jax.Array, jax.Array]:
+    """Sparse all-reduce with error feedback.
+
+    Returns (averaged dense gradient, new residual). The dense psum of the
+    sparsified tensor stands in for the index-union exchange; DCN bytes are
+    k_frac of dense (the payload that actually needs to move).
+    """
+    acc = g + residual
+    flat = jnp.abs(acc.reshape(-1))
+    k = max(int(k_frac * flat.size), 1)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    mask = (jnp.abs(acc) >= thresh).astype(acc.dtype)
+    sparse = acc * mask
+    new_residual = acc - sparse
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    reduced = jax.lax.psum(sparse, axis_name) / n
+    return reduced, new_residual
+
+
+def compress_tree_psum(grads: Any, residuals: Optional[Any], axis_name: str,
+                       method: str, key: jax.Array, k_frac: float = 0.05
+                       ) -> Tuple[Any, Optional[Any]]:
+    """Apply a compression scheme leaf-wise over a gradient pytree."""
+    if method == "none":
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return jax.tree.map(lambda g: jax.lax.psum(g, axis_name) / n, grads), residuals
+    if method == "int8":
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        keys = jax.random.split(key, len(leaves))
+        out = [int8_allreduce(g, axis_name, k) for g, k in zip(leaves, keys)]
+        return jax.tree_util.tree_unflatten(treedef, out), residuals
+    if method == "topk":
+        assert residuals is not None
+        pairs = jax.tree.map(
+            lambda g, r: topk_error_feedback(g, r, axis_name, k_frac),
+            grads, residuals)
+        reduced = jax.tree.map(lambda p: p[0], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        new_res = jax.tree.map(lambda p: p[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return reduced, new_res
+    raise ValueError(method)

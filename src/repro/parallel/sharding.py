@@ -1,0 +1,145 @@
+"""Logical-axis sharding rules → GSPMD shardings.
+
+Every parameter and activation in the model is annotated with *logical* axis
+names ("embed", "heads", "mlp", "experts", "act_batch", ...). A rule table
+maps logical axes onto physical mesh axes; `resolve_spec` drops mesh axes
+that don't divide the dimension (e.g. kv_heads=1 under model=16 → replicate)
+or that are already taken by another dimension of the same tensor. This makes
+one rule table serve all ten architectures and both production meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Axis = Union[str, Tuple[str, ...], None]
+
+# Parameter logical axes. "embed" on weights is the ZeRO-3/FSDP axis.
+DEFAULT_PARAM_RULES: Dict[str, Axis] = {
+    "vocab": "model",
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "lora": None,
+    "layers": None,
+}
+
+# Activation logical axes.
+DEFAULT_ACT_RULES: Dict[str, Axis] = {
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_mlp": "model",
+    "act_experts": "model",
+    "act_group": "data",       # MoE dispatch groups
+    "act_cache_seq": None,
+    "act_vocab": "model",
+}
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """Distribution + performance knobs. Every field is BO-tunable."""
+
+    param_rules: Mapping[str, Axis] = field(default_factory=lambda: dict(DEFAULT_PARAM_RULES))
+    act_rules: Mapping[str, Axis] = field(default_factory=lambda: dict(DEFAULT_ACT_RULES))
+    remat: str = "none"              # none | dots | full
+    microbatches: int = 1
+    attn_block_q: int = 1024         # flash q block
+    attn_block_kv: int = 1024        # flash kv block
+    attn_q_chunks: int = 1           # causal q-chunking (1 = off); saves ~(1-(c+1)/2c) attn FLOPs
+    capacity_factor: Optional[float] = None  # override ArchConfig.moe
+    logits_chunk: int = 1024         # chunked-softmax xent chunk (0 = unchunked)
+    opt_moment_dtype: str = "float32"
+    grad_compression: str = "none"   # none | topk | int8 (pod/DCN axis)
+    grad_compression_topk: float = 0.05
+    scan_layers: bool = True
+    flash_threshold: int = 2048      # use blockwise attention when seq >= this
+    # chunkwise-parallel mLSTM chunk length (0 = paper-faithful per-step scan)
+    mlstm_chunk: int = 0
+    mlstm_bf16_streams: bool = False  # bf16 intra-chunk streams (state fp32)
+    moe_combine: str = "gather"       # gather | a2a (axis-swap reshard)
+
+    def replace(self, **kw) -> "ParallelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Threaded through model code; mesh=None disables constraints (CPU smoke)."""
+
+    mesh: Optional[Mesh]
+    pcfg: ParallelConfig
+
+    @property
+    def axis_sizes(self) -> Dict[str, int]:
+        if self.mesh is None:
+            return {}
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+
+def resolve_spec(shape: Sequence[int], logical: Sequence[Optional[str]],
+                 rules: Mapping[str, Axis], mesh: Mesh) -> PartitionSpec:
+    """Map logical axes to a PartitionSpec, dropping invalid assignments."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        assign: Tuple[str, ...] = ()
+        cand = rules.get(name) if name is not None else None
+        if cand is not None:
+            cand_t = (cand,) if isinstance(cand, str) else tuple(cand)
+            picked = []
+            prod = 1
+            for ax in cand_t:
+                if ax not in sizes or ax in used:
+                    continue
+                if dim % (prod * sizes[ax]) != 0:
+                    continue
+                picked.append(ax)
+                prod *= sizes[ax]
+            assign = tuple(picked)
+            used.update(assign)
+        if len(assign) == 0:
+            out.append(None)
+        elif len(assign) == 1:
+            out.append(assign[0])
+        else:
+            out.append(assign)
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def param_shardings(specs_tree: Any, mesh: Mesh, pcfg: ParallelConfig) -> Any:
+    """NamedSharding tree matching a ParamSpec tree."""
+    from repro.models.params import ParamSpec, is_spec
+
+    def one(spec: ParamSpec) -> NamedSharding:
+        return NamedSharding(mesh, resolve_spec(spec.shape, spec.logical,
+                                                pcfg.param_rules, mesh))
+
+    return jax.tree.map(one, specs_tree, is_leaf=is_spec)
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]], px: ShardCtx) -> jax.Array:
+    """with_sharding_constraint by logical activation axes (no-op off-mesh)."""
+    if px.mesh is None:
+        return x
+    spec = resolve_spec(x.shape, logical, px.pcfg.act_rules, px.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(px.mesh, spec))
+
+
+def act_sharding(shape: Sequence[int], logical: Sequence[Optional[str]],
+                 mesh: Mesh, pcfg: ParallelConfig) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(shape, logical, pcfg.act_rules, mesh))

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests and benches
+# must see 1 device; only launch/dryrun.py forces 512 (in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

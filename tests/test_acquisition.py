@@ -1,0 +1,121 @@
+"""Acquisition functions, contextual variance, multi/advanced-multi."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import acquisition as A
+
+
+def test_ei_prefers_lower_mean_same_sigma():
+    mu = np.array([1.0, 2.0, 3.0])
+    sigma = np.ones(3)
+    s = A.ei_scores(mu, sigma, f_best=2.5, xi=0.0)
+    assert s[0] > s[1] > s[2]
+
+
+def test_ei_prefers_higher_sigma_same_mean():
+    mu = np.full(3, 5.0)
+    sigma = np.array([0.1, 1.0, 3.0])
+    s = A.ei_scores(mu, sigma, f_best=4.0, xi=0.0)
+    assert s[2] > s[1] > s[0]
+
+
+def test_poi_is_probability():
+    rng = np.random.default_rng(0)
+    s = A.poi_scores(rng.normal(5, 2, 100), rng.uniform(0.1, 2, 100), 4.0, 0.0)
+    assert np.all(s >= 0) and np.all(s <= 1)
+
+
+def test_lcb_exploration_monotone():
+    mu = np.array([2.0, 2.0])
+    sigma = np.array([0.5, 1.5])
+    s0 = A.lcb_scores(mu, sigma, lam=0.0)
+    s2 = A.lcb_scores(mu, sigma, lam=2.0)
+    assert s0[0] == s0[1]
+    assert s2[1] > s2[0]     # higher sigma preferred when exploring
+
+
+def test_phi_against_math_erf():
+    z = np.linspace(-4, 4, 33)
+    ref = 0.5 * (1 + np.array([math.erf(v / math.sqrt(2)) for v in z]))
+    np.testing.assert_allclose(A._Phi(z), ref, atol=2e-7)
+
+
+def test_contextual_variance_scale_free():
+    """CV must not change under a global rescaling of the objective
+    (the paper's motivation for the new formula)."""
+    sigma = np.array([1.0, 2.0, 0.5])
+    lam1 = A.contextual_variance(sigma, f_best=10.0, mu_s=20.0, var_s=4.0)
+    k = 1000.0
+    lam2 = A.contextual_variance(sigma * k, f_best=10.0 * k,
+                                 mu_s=20.0 * k, var_s=4.0 * k * k)
+    assert np.isclose(lam1, lam2, rtol=1e-9)
+    assert lam1 >= 0
+
+
+def test_contextual_variance_shrinks_with_improvement():
+    sigma = np.ones(5)
+    lam_worse = A.contextual_variance(sigma, f_best=18.0, mu_s=20.0, var_s=1.0)
+    lam_better = A.contextual_variance(sigma, f_best=5.0, mu_s=20.0, var_s=1.0)
+    assert lam_better < lam_worse
+
+
+def test_dos_recency_weighting():
+    af = A.AFStats("ei", observations=[10.0, 1.0])
+    heavy_recent = af.dos(0.5, median_valid=5.0)
+    af2 = A.AFStats("ei", observations=[1.0, 10.0])
+    heavy_old = af2.dos(0.5, median_valid=5.0)
+    assert heavy_recent < heavy_old   # recent good obs outweighs old
+
+
+def test_dos_invalid_uses_median():
+    af = A.AFStats("ei", observations=[math.nan])
+    assert af.dos(0.75, median_valid=7.5) == 7.5
+
+
+def test_advanced_multi_promotes_consistent_winner():
+    c = A.MultiAcquisition(mode="advanced", skip_threshold=3,
+                           improvement_factor=0.1)
+    afs = {a.name: a for a in c.afs}
+    for _ in range(8):
+        c.record(afs["ei"], 1.0, True)     # consistently great
+        c.record(afs["poi"], 10.0, True)
+        c.record(afs["lcb"], 10.0, True)
+        if [a.name for a in c.active_afs()] == ["ei"]:
+            break
+    assert [a.name for a in c.active_afs()] == ["ei"]
+
+
+def test_advanced_multi_skips_consistent_loser():
+    c = A.MultiAcquisition(mode="advanced", skip_threshold=3,
+                           improvement_factor=0.1)
+    afs = {a.name: a for a in c.afs}
+    for _ in range(10):
+        c.record(afs["ei"], 5.0, True)
+        c.record(afs["poi"], 5.0, True)
+        c.record(afs["lcb"], 50.0, True)   # consistently terrible
+        if not afs["lcb"].active:
+            break
+    assert not afs["lcb"].active
+    assert afs["ei"].active and afs["poi"].active
+
+
+def test_multi_duplicate_skipping():
+    c = A.MultiAcquisition(mode="multi", skip_threshold=2)
+    afs = {a.name: a for a in c.afs}
+    # give ei a better (lower) history than poi so ei survives the pit
+    for v_ei, v_poi in [(1.0, 9.0)] * 3:
+        c.record(afs["ei"], v_ei, True)
+        c.record(afs["poi"], v_poi, True)
+    for _ in range(4):
+        c.register_duplicates({"ei": 7, "poi": 7, "lcb": 3})
+    assert afs["ei"].active
+    assert not afs["poi"].active
+    assert afs["lcb"].active     # never conflicted
+
+
+def test_round_robin_covers_active():
+    c = A.MultiAcquisition(mode="advanced")
+    seen = [c.next_af().name for _ in range(6)]
+    assert seen == ["ei", "poi", "lcb", "ei", "poi", "lcb"]

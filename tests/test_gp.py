@@ -1,0 +1,134 @@
+"""GP surrogate: closed-form checks, engine equivalence, invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.gp import GP, gp_fit, gp_predict, kernel_fn
+from repro.core.gp_fast import IncrementalGP, kernel_np
+
+
+def test_matern_kernels_at_zero_and_decay():
+    r = jnp.asarray([0.0, 0.5, 1.0, 5.0])
+    for name in ("matern12", "matern32", "matern52", "rbf"):
+        k = np.asarray(kernel_fn(name, r, 2.0))
+        assert np.isclose(k[0], 1.0)
+        assert np.all(np.diff(k) < 0), name      # monotone decreasing
+        assert np.all(k > 0)
+
+
+def test_matern_np_matches_jax():
+    r = np.linspace(0, 4, 50)
+    for name in ("matern12", "matern32", "matern52", "rbf"):
+        np.testing.assert_allclose(kernel_np(name, r, 1.7),
+                                   np.asarray(kernel_fn(name, jnp.asarray(r), 1.7)),
+                                   rtol=1e-6)
+
+
+def _closed_form(X, y, Xc, ell, noise=1e-6):
+    """Dense float64 reference posterior."""
+    def k(A, B):
+        r = np.sqrt(np.maximum(
+            (A * A).sum(1)[:, None] + (B * B).sum(1)[None] - 2 * A @ B.T, 0))
+        return kernel_np("matern32", r, ell)
+    ym, ys = y.mean(), max(y.std(), 1e-12)
+    yc = (y - ym) / ys
+    K = k(X, X) + noise * np.eye(len(X))
+    Ks = k(Xc, X)
+    Kinv = np.linalg.inv(K)
+    mu = ym + ys * (Ks @ Kinv @ yc)
+    var = 1.0 - np.einsum("ij,jk,ik->i", Ks, Kinv, Ks)
+    return mu, np.sqrt(np.maximum(var, 1e-12)) * ys
+
+
+def _rand_problem(seed, n_obs=15, n_cand=100, d=4):
+    rng = np.random.default_rng(seed)
+    X = rng.random((n_obs, d))
+    y = rng.normal(3.0, 1.5, n_obs)
+    Xc = rng.random((n_cand, d))
+    return X.astype(np.float32), y.astype(np.float64), Xc.astype(np.float32)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_jax_gp_matches_closed_form(seed):
+    X, y, Xc = _rand_problem(seed)
+    g = GP(X.shape[1], max_obs=32, kernel="matern32", ell=2.0)
+    for x, yy in zip(X, y):
+        g.add(x, float(yy))
+    mu, sd = g.predict(Xc)
+    mu_ref, sd_ref = _closed_form(X.astype(np.float64), y, Xc.astype(np.float64), 2.0)
+    np.testing.assert_allclose(np.asarray(mu), mu_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(sd), sd_ref, rtol=5e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_incremental_matches_closed_form(seed):
+    X, y, Xc = _rand_problem(seed)
+    g = IncrementalGP(Xc, max_obs=32, kernel="matern32", ell=2.0)
+    for x, yy in zip(X, y):
+        g.add(x, float(yy))
+    mu, sd = g.predict()
+    mu_ref, sd_ref = _closed_form(X.astype(np.float64), y, Xc.astype(np.float64), 2.0)
+    np.testing.assert_allclose(mu, mu_ref, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(sd, sd_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_engines_equivalent_incrementally():
+    rng = np.random.default_rng(7)
+    Xc = rng.random((200, 5)).astype(np.float32)
+    g1 = GP(5, max_obs=24, ell=1.5)
+    g2 = IncrementalGP(Xc, max_obs=24, ell=1.5)
+    for i in range(20):
+        x = Xc[rng.integers(200)]
+        yv = float(rng.normal(10, 2))
+        g1.add(x, yv)
+        g2.add(x, yv)
+        if i % 5 == 4:
+            m1, s1 = g1.predict(Xc)
+            m2, s2 = g2.predict()
+            np.testing.assert_allclose(np.asarray(m1), m2, rtol=2e-3, atol=2e-3)
+            np.testing.assert_allclose(np.asarray(s1), s2, rtol=2e-2, atol=2e-3)
+
+
+def test_gp_interpolates_observations():
+    """With tiny noise the posterior mean passes through the data and the
+    posterior std collapses there."""
+    X, y, _ = _rand_problem(11, n_obs=10)
+    g = IncrementalGP(X, max_obs=16, ell=2.0, noise=1e-8)
+    for x, yy in zip(X, y):
+        g.add(x, float(yy))
+    mu, sd = g.predict()
+    np.testing.assert_allclose(mu, y, rtol=1e-4, atol=1e-4)
+    assert sd.max() < 1e-2 * max(y.std(), 1.0)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_prop_posterior_variance_bounds(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 20))
+    Xc = rng.random((50, 3)).astype(np.float32)
+    g = IncrementalGP(Xc, max_obs=24, ell=float(rng.uniform(0.5, 3.0)))
+    for _ in range(n):
+        g.add(rng.random(3), float(rng.normal()))
+    _, sd = g.predict()
+    assert np.all(sd >= 0)
+    assert np.all(sd <= 1.05 * g.y_std + 1e-6)  # prior variance bound
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_prop_variance_shrinks_with_observations(seed):
+    rng = np.random.default_rng(seed)
+    Xc = rng.random((60, 3)).astype(np.float32)
+    g = IncrementalGP(Xc, max_obs=24, ell=2.0)
+    g.add(rng.random(3), 1.0)
+    _, sd1 = g.predict()
+    for _ in range(8):
+        g.add(rng.random(3), float(rng.normal(1.0, 0.1)))
+    _, sd2 = g.predict()
+    # normalized (unit-prior) variance is monotone non-increasing in data
+    assert np.all(sd2 / g.y_std <= sd1 / 1.0 + 1e-5)

@@ -1,0 +1,111 @@
+"""HLO cost analyzer: parsing robustness + trip-count correctness."""
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import (HloCostModel, analyze, parse_instr,
+                                   shape_bytes, shape_elems, _groups_span_dcn)
+
+
+def test_parse_instr_simple():
+    ln = "  %dot.1 = f32[128,64]{1,0} dot(%a, %b), lhs_contracting_dims={1}"
+    name, rtype, op = parse_instr(ln)
+    assert name == "%dot.1" and op == "dot"
+    assert shape_elems(rtype) == 128 * 64
+
+
+def test_parse_instr_tuple_with_comments():
+    ln = ("  %while.1 = (s32[], bf16[2,3]{1,0}, /*index=2*/f32[4]{0}) "
+          "while(%t), condition=%c, body=%b")
+    name, rtype, op = parse_instr(ln)
+    assert op == "while"
+    assert shape_bytes(rtype) == 4 + 2 * 3 * 2 + 4 * 4
+
+
+def test_parse_instr_root():
+    ln = "  ROOT %add.3 = s32[] add(%x, %y)"
+    assert parse_instr(ln)[2] == "add"
+
+
+def test_shape_bytes_dtypes():
+    assert shape_bytes("bf16[10,10]{1,0}") == 200
+    assert shape_bytes("pred[8]{0}") == 8
+    assert shape_bytes("f32[]") == 4
+
+
+def test_dcn_group_detection_iota():
+    ln = "x all-reduce(%a), replica_groups=[2,256]<=[512], other"
+    assert _groups_span_dcn(ln, 256) is False      # groups of 256 consecutive
+    ln2 = "x all-reduce(%a), replica_groups=[256,2]<=[2,256]T(1,0), other"
+    assert _groups_span_dcn(ln2, 256) is True      # pairs straddle pods
+
+
+def test_dcn_group_detection_list():
+    assert _groups_span_dcn("replica_groups={{0,256},{1,257}} ", 256) is True
+    assert _groups_span_dcn("replica_groups={{0,1},{2,3}} ", 256) is False
+
+
+_HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %dot.1 = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %dot.1)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %a)
+  %while.1 = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%while.1), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies_flops():
+    res = analyze(_HLO)
+    # one 8x8x8 dot (1024 flops) x 10 trips (+ small add flops)
+    assert 10 * 1024 <= res["flops"] <= 10 * 1024 + 200
+
+
+def test_collectives_inside_while_scale():
+    hlo = _HLO.replace(
+        "%dot.1 = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+        "%dot.1 = f32[8,8]{1,0} all-reduce(%x), replica_groups={{0,1}}, to_apply=%c2")
+    res = analyze(hlo)
+    assert res["coll_bytes"] == 10 * 8 * 8 * 4
+
+
+def test_scan_matches_unrolled_on_real_program():
+    import jax, jax.numpy as jnp
+    from jax import lax
+
+    def scanned(x, w):
+        y, _ = lax.scan(lambda c, wi: (c @ wi, None), x, w)
+        return y
+
+    def unrolled(x, w):
+        for i in range(6):
+            x = x @ w[i]
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+    fs = analyze(jax.jit(scanned).lower(x, w).compile().as_text())["flops"]
+    fu = analyze(jax.jit(unrolled).lower(x, w).compile().as_text())["flops"]
+    true = 6 * 2 * 64 ** 3
+    assert abs(fs - true) / true < 0.2
+    assert abs(fu - true) / true < 0.2

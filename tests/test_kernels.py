@@ -1,0 +1,122 @@
+"""Per-kernel allclose vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gp_fast import IncrementalGP
+from repro.kernels import ops, ref
+
+
+# -- GEMM --------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,N,K", [(128, 128, 128), (256, 384, 512),
+                                   (512, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_shapes_dtypes(M, N, K, dtype):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(M, K)), dtype)
+    b = jnp.asarray(rng.normal(size=(K, N)), dtype)
+    out = ops.gemm(a, b, block_m=128, block_n=128, block_k=128)
+    want = ref.gemm(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(64, 64, 64), (128, 64, 256)])
+def test_gemm_block_configs(bm, bn, bk):
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    out = ops.gemm(a, b, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.gemm(a, b)),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_gemm_rejects_indivisible():
+    a = jnp.zeros((100, 128), jnp.float32)
+    b = jnp.zeros((128, 128), jnp.float32)
+    with pytest.raises(AssertionError):
+        ops.gemm(a, b, block_m=64, block_n=64, block_k=64)
+
+
+# -- flash attention -----------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,hd", [(1, 128, 2, 64), (2, 256, 4, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_shapes_dtypes(B, S, H, hd, dtype):
+    rng = np.random.default_rng(2)
+    q, k, v = (jnp.asarray(rng.normal(size=(B, S, H, hd)), dtype)
+               for _ in range(3))
+    out = ops.flash_attention(q, k, v, block_q=64, block_kv=64)
+    want = ref.attention(q, k, v, causal=True)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bq,bkv", [(32, 128), (128, 32), (64, 64)])
+def test_flash_block_configs(bq, bkv):
+    rng = np.random.default_rng(3)
+    q, k, v = (jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.float32)
+               for _ in range(3))
+    out = ops.flash_attention(q, k, v, block_q=bq, block_kv=bkv)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.attention(q, k, v)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_noncausal():
+    rng = np.random.default_rng(4)
+    q, k, v = (jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.float32)
+               for _ in range(3))
+    out = ops.flash_attention(q, k, v, block_q=64, block_kv=64, causal=False)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.attention(q, k, v, causal=False)),
+                               rtol=2e-4, atol=2e-4)
+
+
+# -- Matérn GP posterior ---------------------------------------------------------
+
+@pytest.mark.parametrize("t,N,d", [(13, 512, 6), (37, 1024, 15)])
+@pytest.mark.parametrize("nu", ["matern32", "matern52"])
+def test_gp_kernel_vs_oracle_and_engine(t, N, d, nu):
+    rng = np.random.default_rng(5)
+    Xc = rng.random((N, d)).astype(np.float32)
+    g = IncrementalGP(Xc, max_obs=64, kernel=nu, ell=2.0)
+    for _ in range(t):
+        g.add(Xc[rng.integers(N)], float(rng.normal(10, 3)))
+    x_obs, vinv, w, mask, y_mean, y_std = ops.gp_inputs_from_incremental(g)
+    mean_k, var_k = ops.gp_posterior(
+        jnp.asarray(Xc), jnp.asarray(x_obs), jnp.asarray(vinv),
+        jnp.asarray(w), jnp.asarray(mask), ell=2.0, nu=nu, block_n=256)
+    # kernel vs same-precision jnp oracle. The VARIANCE path is well
+    # conditioned -> tight. The MEAN is amplified by ||L^-1||*||w|| (GP
+    # kernel matrices are ill-conditioned), so even two fp32 codings differ
+    # by ~kappa*eps: bound by a fraction of the mean's range instead.
+    m_r, v_r = ref.gp_posterior(jnp.asarray(Xc), jnp.asarray(x_obs),
+                                jnp.asarray(vinv), jnp.asarray(w), 2.0, nu)
+    np.testing.assert_allclose(np.asarray(var_k), np.asarray(v_r),
+                               rtol=3e-3, atol=1e-4)
+    m_r = np.asarray(m_r)
+    rng_m = m_r.max() - m_r.min() + 1e-9
+    assert np.abs(np.asarray(mean_k) - m_r).max() < 0.03 * rng_m
+    # behavioral: fp32 kernel vs float64 incremental engine. GP systems are
+    # ill-conditioned, so pointwise fp32 error can reach ~2% of the y-range —
+    # what matters for acquisition is the RANKING, which must agree.
+    mu_k = y_mean + y_std * np.asarray(mean_k)
+    mu_i, _ = g.predict()
+    y_range = mu_i.max() - mu_i.min()
+    assert np.abs(mu_k - mu_i).max() < 0.05 * y_range
+    top_k = set(np.argsort(mu_k)[:20])
+    top_i = set(np.argsort(mu_i)[:20])
+    assert len(top_k & top_i) >= 18
+
+
+def test_vmem_models_monotone():
+    from repro.kernels.flash_attention import flash_vmem_bytes
+    from repro.kernels.gemm import gemm_vmem_bytes
+    assert gemm_vmem_bytes(256, 256, 256) < gemm_vmem_bytes(512, 512, 512)
+    assert flash_vmem_bytes(256, 256, 128) < flash_vmem_bytes(1024, 1024, 128)

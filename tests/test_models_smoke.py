@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU).
+
+One forward/train step per assigned architecture: output shapes + no NaNs.
+Plus decode-path consistency: prefill-then-decode must match the full-seq
+forward (exercises KV caches, MLA absorbed decode, RG-LRU/xLSTM states).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.arch import SHAPES_BY_NAME, shape_applicable
+from repro.configs.registry import ARCHS, get_arch, smoke_config
+from repro.models.params import count_params, init_params
+from repro.models.stepfn import (loss_fn, make_decode_step, make_prefill_step,
+                                 make_train_step)
+from repro.optim.optimizers import AdamW, constant_lr
+from repro.parallel.sharding import ParallelConfig, ShardCtx
+
+PX = ShardCtx(mesh=None, pcfg=ParallelConfig(
+    flash_threshold=64, attn_block_kv=16, attn_block_q=16, logits_chunk=16))
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    if cfg.frontend == "embeddings":
+        b = {"frame_embeddings": jax.random.normal(
+            KEY, (B, S, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+        if cfg.cross_attention:
+            b["cond"] = jax.random.normal(KEY, (B, cfg.cross_seq, cfg.d_model),
+                                          jnp.dtype(cfg.dtype))
+        return b
+    return {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_smoke_forward_and_train_step(name):
+    cfg = smoke_config(name)
+    params = init_params(cfg, KEY)
+    batch = _batch(cfg)
+    loss, met = jax.jit(lambda p, b: loss_fn(p, b, cfg=cfg, px=PX))(params, batch)
+    assert np.isfinite(float(loss)), name
+    assert 0 < float(loss) < 2 * np.log(cfg.vocab_size) + 2
+
+    opt = AdamW(schedule=constant_lr(1e-3))
+    step = jax.jit(make_train_step(cfg, PX, opt))
+    new_p, new_s, m = step(params, opt.init(params), batch, jnp.zeros((), jnp.int32))
+    assert np.isfinite(float(m["loss"]))
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, x: a + float(jnp.sum(jnp.abs(x[0].astype(jnp.float32)
+                                               - x[1].astype(jnp.float32)))),
+        jax.tree.map(lambda a, b: (a, b), new_p, params), 0.0,
+        is_leaf=lambda x: isinstance(x, tuple))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_smoke_param_count_positive(name):
+    full = get_arch(name)
+    smoke = smoke_config(name)
+    assert count_params(smoke) < count_params(full)
+    if full.moe is not None:
+        assert full.active_param_count() < full.param_count()
+
+
+@pytest.mark.parametrize("name", ["gemma-2b", "deepseek-v3-671b",
+                                  "recurrentgemma-9b", "xlstm-1.3b",
+                                  "qwen3-moe-30b-a3b"])
+def test_prefill_decode_consistency(name):
+    """decode(prefill(x[:n]), x[n]) logits == forward(x[:n+1]) last logits."""
+    cfg = smoke_config(name)
+    params = init_params(cfg, KEY)
+    B, S = 2, 17
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S + 1), 0,
+                                cfg.vocab_size)
+    cap = S + 4
+
+    prefill = jax.jit(make_prefill_step(cfg, PX, cache_cap=cap))
+    decode = jax.jit(make_decode_step(cfg, PX))
+    _, cache = prefill(params, {"tokens": tokens[:, :S]})
+    logits_dec, _ = decode(params, cache, {"tokens": tokens[:, S:S + 1]},
+                           jnp.asarray(S, jnp.int32))
+
+    logits_full, _ = jax.jit(make_prefill_step(cfg, PX, cache_cap=cap))(
+        params, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(logits_dec, np.float32),
+                               np.asarray(logits_full, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_long_500k_applicability_rules():
+    long = SHAPES_BY_NAME["long_500k"]
+    ok_archs = {n for n in ARCHS if shape_applicable(get_arch(n), long)[0]}
+    assert ok_archs == {"recurrentgemma-9b", "xlstm-1.3b"}
+    for n in ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_arch(n), SHAPES_BY_NAME[s])[0]
+
+
+def test_pattern_layers_cover_depth():
+    for n in ARCHS:
+        cfg = get_arch(n)
+        total = sum(nr * len(cyc) for nr, cyc in cfg.pattern_layers())
+        assert total == cfg.num_layers, n
+
+
+def test_full_param_counts_sane():
+    """6ND sanity: full configs land near their nameplate sizes."""
+    approx = {
+        "deepseek-v3-671b": (6.3e11, 7.2e11),
+        "mistral-large-123b": (1.1e11, 1.35e11),
+        "gemma-2b": (2.0e9, 3.2e9),
+        "qwen3-moe-30b-a3b": (2.6e10, 3.4e10),
+        "internlm2-1.8b": (1.5e9, 2.2e9),
+        "chameleon-34b": (3.0e10, 3.9e10),
+    }
+    for name, (lo, hi) in approx.items():
+        n = get_arch(name).param_count()
+        assert lo <= n <= hi, (name, n)

@@ -1,0 +1,117 @@
+"""SearchSpace unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.searchspace import Param, SearchSpace
+
+
+def small_space():
+    return SearchSpace([
+        Param("a", (1, 2, 4, 8)),
+        Param("b", ("x", "y", "z")),
+        Param("c", (0, 1)),
+    ], name="small")
+
+
+def test_enumeration_and_size():
+    s = small_space()
+    assert s.cartesian_size == 24
+    assert s.size == 24
+    assert s.dim == 3
+
+
+def test_constraints_filter():
+    s = SearchSpace([Param("a", (1, 2, 4, 8)), Param("b", (1, 2, 4))],
+                    [lambda c: c["a"] * c["b"] <= 8])
+    for i in range(s.size):
+        cfg = s.config(i)
+        assert cfg["a"] * cfg["b"] <= 8
+    assert s.size == 9
+
+
+def test_index_roundtrip():
+    s = small_space()
+    for i in range(s.size):
+        assert s.index_of(s.config(i)) == i
+    assert s.index_of({"a": 3, "b": "x", "c": 0}) is None
+
+
+def test_normalization_in_unit_cube_by_ordinal():
+    s = small_space()
+    assert s.X_norm.min() >= 0.0 and s.X_norm.max() <= 1.0
+    # `a` values are powers of two but normalized ORDINALLY (paper §III-D1)
+    a_col = sorted(set(s.X_norm[:, 0].tolist()))
+    assert np.allclose(a_col, [0.0, 1 / 3, 2 / 3, 1.0])
+
+
+def test_singleton_param_normalizes_to_half():
+    s = SearchSpace([Param("a", (1, 2)), Param("fixed", ("only",))])
+    assert np.allclose(s.X_norm[:, 1], 0.5)
+
+
+def test_hamming_neighbors():
+    s = small_space()
+    n = s.hamming_neighbors(0)
+    assert len(n) == (4 - 1) + (3 - 1) + (2 - 1)
+    row0 = s.value_indices[0]
+    for j in n:
+        assert int(np.sum(s.value_indices[j] != row0)) == 1
+
+
+def test_hamming_neighbors_respect_constraints():
+    s = SearchSpace([Param("a", (1, 2, 4, 8)), Param("b", (1, 2, 4))],
+                    [lambda c: c["a"] * c["b"] <= 8])
+    i = s.index_of({"a": 4, "b": 2})
+    for j in s.hamming_neighbors(i):
+        cfg = s.config(j)
+        assert cfg["a"] * cfg["b"] <= 8
+
+
+def test_nearest_index_snaps_and_excludes():
+    s = small_space()
+    x = s.X_norm[5]
+    assert s.nearest_index(x) == 5
+    alt = s.nearest_index(x, exclude={5})
+    assert alt != 5
+
+
+# -- property tests ----------------------------------------------------------
+
+@st.composite
+def spaces(draw):
+    n_params = draw(st.integers(1, 4))
+    params = []
+    for j in range(n_params):
+        n_vals = draw(st.integers(1, 5))
+        params.append(Param(f"p{j}", tuple(range(n_vals))))
+    return SearchSpace(params, name="prop")
+
+
+@given(spaces())
+@settings(max_examples=40, deadline=None)
+def test_prop_norm_bounds_and_lookup_total(s):
+    assert s.X_norm.shape == (s.size, s.dim)
+    assert float(s.X_norm.min()) >= 0.0
+    assert float(s.X_norm.max()) <= 1.0
+    # lookup is a bijection over enumerated configs
+    seen = {s.index_of(s.config(i)) for i in range(s.size)}
+    assert seen == set(range(s.size))
+
+
+@given(spaces(), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_prop_neighbors_symmetric(s, seed):
+    i = seed % s.size
+    for j in s.hamming_neighbors(i):
+        assert i in s.hamming_neighbors(j)
+
+
+@given(spaces(), st.data())
+@settings(max_examples=30, deadline=None)
+def test_prop_nearest_is_argmin(s, data):
+    x = np.array([data.draw(st.floats(0, 1)) for _ in range(s.dim)],
+                 np.float32)
+    i = s.nearest_index(x)
+    d = np.sum((s.X_norm - x[None]) ** 2, axis=1)
+    assert np.isclose(d[i], d.min())

@@ -1,0 +1,83 @@
+"""Paper search spaces (Table II/III fidelity) and MAE/MDF metrics."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+from repro.core.spaces import GPUS, PAPER_KERNELS, make_objective
+
+
+@pytest.mark.parametrize("kernel", list(PAPER_KERNELS))
+def test_space_sizes_match_paper(kernel):
+    pk = PAPER_KERNELS[kernel]
+    for gpu in GPUS:
+        obj = make_objective(kernel, gpu)
+        assert obj.space.size == pk.space_size[gpu], (kernel, gpu)
+        want_inv = int(round(pk.invalid[gpu] * pk.space_size[gpu]))
+        assert abs(obj.n_invalid - want_inv) <= 1, (kernel, gpu)
+
+
+def test_paper_invalid_counts_table2():
+    """Titan X row of Table II: conv 3624 invalid, pnpoly ~323."""
+    assert make_objective("convolution", "gtx_titan_x").n_invalid == 3624
+    assert abs(make_objective("pnpoly", "gtx_titan_x").n_invalid - 319) <= 8
+
+
+def test_minimum_near_paper_value():
+    for kernel in PAPER_KERNELS:
+        pk = PAPER_KERNELS[kernel]
+        obj = make_objective(kernel, "gtx_titan_x")
+        assert obj.optimum >= pk.minimum["gtx_titan_x"] * 0.98
+
+
+def test_surface_multimodal_and_noisy():
+    obj = make_objective("pnpoly", "gtx_titan_x")
+    t = obj.times[np.isfinite(obj.times)]
+    assert t.std() / t.mean() > 0.05           # real variation
+    near_opt = np.sum(t <= obj.optimum * 1.02)
+    assert near_opt < 0.01 * len(t)            # optimum is rare
+
+
+def test_deterministic_objective():
+    a = make_objective("gemm", "a100")
+    b = make_objective("gemm", "a100")
+    assert a is b or np.allclose(a.times, b.times, equal_nan=True)
+
+
+# -- metrics -------------------------------------------------------------
+
+def test_mae_formula():
+    trace = np.full(220, 10.0)
+    trace[100:] = 6.0
+    # checkpoints 40..220 step 20 -> 10 values: 4 at 10.0 (40,60,80,100), 6 at 6.0
+    got = M.mae(trace, optimum=5.0)
+    want = (4 * 5.0 + 6 * 1.0) / 10
+    assert np.isclose(got, want)
+
+
+def test_mae_short_trace_truncates():
+    trace = np.full(50, 7.0)
+    assert np.isclose(M.mae(trace, 5.0), 2.0)
+
+
+def test_deviation_factors_mean_one():
+    d = M.deviation_factors({"a": 1.0, "b": 2.0, "c": 3.0})
+    assert np.isclose(np.mean(list(d.values())), 1.0)
+
+
+def test_mdf_table_scale_invariant_across_kernels():
+    per_kernel = {
+        "k1": {"s1": 1.0, "s2": 3.0},     # ms-scale kernel
+        "k2": {"s1": 1000.0, "s2": 3000.0},  # same ratios, different scale
+    }
+    t = M.mdf_table(per_kernel)
+    assert np.isclose(t["s1"]["mdf"], 0.5)
+    assert np.isclose(t["s2"]["mdf"], 1.5)
+    assert np.isclose(t["s1"]["std"], 0.0)
+
+
+def test_evals_to_match():
+    trace = np.array([9.0, 8.0, 7.0, 6.0, 5.0])
+    assert M.evals_to_match(trace, 6.5, 10) == 4
+    assert M.evals_to_match(trace, 1.0, 5) == 6   # never matched -> max+1

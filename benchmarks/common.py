@@ -19,6 +19,11 @@ from repro.core.strategies import make_strategy  # noqa: E402
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
+# Evaluation parallelism for every matrix run; set by ``benchmarks.run
+# --workers N``. workers=1 keeps the bit-for-bit sequential path.
+WORKERS = 1
+BATCH_SIZE = 1
+
 
 def emit(name: str, us_per_call: float, derived) -> None:
     """The run.py contract: ``name,us_per_call,derived`` CSV rows."""
@@ -27,8 +32,12 @@ def emit(name: str, us_per_call: float, derived) -> None:
 
 def run_matrix(kernels: Sequence[str], gpu: str, strategies: Sequence[str],
                repeats: int, budget: int = 220,
-               random_repeats: Optional[int] = None) -> Dict:
+               random_repeats: Optional[int] = None,
+               workers: Optional[int] = None,
+               batch_size: Optional[int] = None) -> Dict:
     """Per (kernel, strategy): traces + mean MAE (paper methodology)."""
+    workers = WORKERS if workers is None else workers
+    batch_size = BATCH_SIZE if batch_size is None else batch_size
     out: Dict[str, Dict[str, Dict]] = {}
     for kernel in kernels:
         obj = make_objective(kernel, gpu)
@@ -39,7 +48,8 @@ def run_matrix(kernels: Sequence[str], gpu: str, strategies: Sequence[str],
             for seed in range(reps):
                 t0 = time.time()
                 res = run_strategy(make_strategy(strat), obj, budget=budget,
-                                   seed=seed)
+                                   seed=seed, workers=workers,
+                                   batch_size=batch_size)
                 times.append(time.time() - t0)
                 traces.append(res.trace)
             maes = [mae(t, obj.optimum) for t in traces]

@@ -1,0 +1,79 @@
+"""Parallel evaluation engine throughput (the refactor's acceptance bar).
+
+The objective is the toy simulated space wrapped in a per-eval sleep, which
+models the real cost profile: compile-and-run dominates, the strategy math is
+noise. At equal budget, ``--workers 8`` must cut tuning wall-clock by >= 4x
+vs ``--workers 1`` for batchable strategies (BO constant-liar, random, GA).
+
+  PYTHONPATH=src python -m benchmarks.run --only engine [--workers 8]
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, save_json
+from repro.core.objectives import Objective, SimulatedObjective
+from repro.core.runner import run_strategy
+from repro.core.searchspace import Param, SearchSpace
+from repro.core.strategies import make_strategy
+
+DELAY_S = 0.01       # simulated compile-and-run latency per evaluation
+BUDGET = 64
+
+
+class SlowObjective(Objective):
+    def __init__(self, inner: Objective, delay_s: float = DELAY_S):
+        self.inner, self.delay_s = inner, delay_s
+        self.space, self.name = inner.space, "slow_" + inner.name
+
+    def __call__(self, idx: int) -> float:
+        time.sleep(self.delay_s)
+        return self.inner(idx)
+
+
+def _toy(seed=0, n=400, invalid_frac=0.2):
+    rng = np.random.default_rng(seed)
+    space = SearchSpace([Param("a", tuple(range(20))),
+                         Param("b", tuple(range(20)))], name="toy")
+    x = space.X_norm
+    times = 1.0 + 5 * ((x[:, 0] - 0.3) ** 2 + (x[:, 1] - 0.7) ** 2) \
+        + 0.3 * np.sin(7 * x[:, 0]) * np.cos(5 * x[:, 1])
+    inv = rng.choice(n, int(invalid_frac * n), replace=False)
+    times = times.astype(np.float64)
+    times[inv] = math.nan
+    return SimulatedObjective(space, times, name="toy")
+
+
+def main(repeats: int = 3, workers: int = 0) -> None:
+    workers = workers or (common.WORKERS if common.WORKERS > 1 else 8)
+    payload = {}
+    for strat in ("random", "ei", "advanced_multi", "genetic_algorithm"):
+        seq_s, par_s = [], []
+        for seed in range(repeats):
+            obj = SlowObjective(_toy())
+            t0 = time.time()
+            r1 = run_strategy(make_strategy(strat), obj, budget=BUDGET,
+                              seed=seed)
+            seq_s.append(time.time() - t0)
+            t0 = time.time()
+            rw = run_strategy(make_strategy(strat), obj, budget=BUDGET,
+                              seed=seed, workers=workers, batch_size=workers)
+            par_s.append(time.time() - t0)
+            assert rw.unique_evals == r1.unique_evals
+        seq_us = float(np.mean(seq_s)) * 1e6 / BUDGET
+        par_us = float(np.mean(par_s)) * 1e6 / BUDGET
+        speedup = seq_us / par_us
+        emit(f"engine/{strat}_seq_per_eval", seq_us, f"budget={BUDGET}")
+        emit(f"engine/{strat}_w{workers}_per_eval", par_us,
+             f"speedup={speedup:.1f}x")
+        payload[strat] = {"seq_s": seq_s, "par_s": par_s, "workers": workers,
+                          "speedup": speedup}
+    save_json("engine_throughput", payload)
+
+
+if __name__ == "__main__":
+    main()

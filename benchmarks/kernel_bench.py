@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, save_json
 from repro.core.gp import GP
-from repro.core.gp_fast import IncrementalGP
+from repro.core.gp_fast import IncrementalGP, forward_substitute
 from repro.kernels import ops, ref
 
 
@@ -101,11 +101,37 @@ def bench_matern_kernel():
     emit("kernels/matern_gp_interp_4k", us, f"vs_engine_err={err:.2e}")
 
 
+def bench_triangular_solve():
+    """IncrementalGP's forward substitution: generic np.linalg.solve is
+    O(t^3) per add; scipy solve_triangular exploits the factor in O(t^2)."""
+    rng = np.random.default_rng(4)
+    t = 220   # paper budget = worst-case factor size
+    L = np.tril(rng.random((t, t))) + t * np.eye(t)
+    b = rng.random(t)
+
+    reps = 200
+    t0 = time.time()
+    for _ in range(reps):
+        x_gen = np.linalg.solve(L, b)
+    gen_us = (time.time() - t0) / reps * 1e6
+    t0 = time.time()
+    for _ in range(reps):
+        x_tri = forward_substitute(L, b)
+    tri_us = (time.time() - t0) / reps * 1e6
+    err = float(np.max(np.abs(x_gen - x_tri)))
+    emit("gp/solve_generic_t220", gen_us, f"maxerr={err:.2e}")
+    emit("gp/solve_triangular_t220", tri_us,
+         f"speedup={gen_us / tri_us:.1f}x")
+    save_json("triangular_solve", {"generic_us": gen_us, "triangular_us": tri_us,
+                                   "speedup": gen_us / tri_us})
+
+
 def main(repeats: int = 3) -> None:
     bench_gemm()
     bench_flash()
     bench_matern_kernel()
     bench_gp_engines()
+    bench_triangular_solve()
 
 
 if __name__ == "__main__":

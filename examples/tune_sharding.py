@@ -31,6 +31,8 @@ def main():
     ap.add_argument("--init", type=int, default=5)
     ap.add_argument("--strategy", default="advanced_multi")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="parallel compile evaluations (constant-liar batch)")
     args = ap.parse_args()
 
     obj = DryRunObjective(args.arch, args.shape, args.mesh)
@@ -40,6 +42,8 @@ def main():
     strat = BOStrategy(BOConfig(acquisition=args.strategy,
                                 initial_samples=args.init))
     res = run_strategy(strat, obj, budget=args.budget, seed=args.seed,
+                       workers=args.workers,
+                       batch_size=max(args.workers, 1),
                        checkpoint_path="results/tune_cache/"
                        f"journal_{args.arch}_{args.shape}.json", resume=True)
     print(f"\nbest distribution config: {obj.space.config(res.best_idx)}")

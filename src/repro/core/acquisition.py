@@ -90,6 +90,26 @@ def contextual_variance(sigma: np.ndarray, f_best: float, mu_s: float,
     return float(max(lam, 0.0))
 
 
+def batch_contextual_variance(sigma: np.ndarray, evaluated: np.ndarray,
+                              pending: np.ndarray, f_best: float, mu_s: float,
+                              var_s: float) -> float:
+    """Contextual Variance for batch/async suggestion (DESIGN.md §4).
+
+    During constant-liar batch construction, configs already holding a fantasy
+    observation (``pending``) are no longer exploration targets: their
+    posterior variance has been collapsed by the speculative GP update, and
+    counting them in the mean posterior variance would bias λ downward —
+    every fantasy would make the remaining batch members greedier. Exclude
+    both evaluated and pending configs, exactly as the sequential path
+    excludes evaluated ones; ``sigma`` must come from the fantasy-updated GP
+    so λ reflects the variance that actually remains on the table.
+    """
+    free = ~(np.asarray(evaluated, bool) | np.asarray(pending, bool))
+    if not np.any(free):
+        return 0.01
+    return contextual_variance(sigma[free], f_best, mu_s, var_s)
+
+
 @dataclass
 class AFStats:
     name: str

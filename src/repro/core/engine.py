@@ -1,0 +1,243 @@
+"""Batched parallel evaluation engine for ask/tell strategies (DESIGN.md §5).
+
+The engine owns the loop the strategies used to own: it asks a strategy for
+up to ``batch_size`` proposals, evaluates them on a worker pool (thread or
+process backend), and tells the strategy each result. Semantics are pinned
+to the sequential seed implementation:
+
+  * Budget counts UNIQUE evaluations; cache hits cost only ``total_calls``
+    (capped at ``max_total_calls``); invalid configs and proposals outside
+    the restricted space consume budget without an objective call.
+  * In-flight dedup: a proposal for a config already being evaluated is not
+    dispatched again — it is resolved with the first evaluation's result.
+  * Ordered journal: observations are recorded (and checkpointed) in
+    proposal-acceptance order, never completion order, so the journal is
+    always a prefix of a deterministic sequence and ``TuningRun.resume``
+    stays lossless even when a run is killed mid-batch.
+  * Strategy tells arrive in the same acceptance order, which is what makes
+    ``batch_size=1, workers=1`` reproduce the seed's sequential runs
+    bit-for-bit (golden-trace tests).
+  * Per-worker budget accounting: every dispatched evaluation is attributed
+    to the worker that ran it (``TuneResult.worker_stats``).
+
+With ``workers=1`` evaluations run inline in the caller's thread — no pool,
+no overhead, identical to the seed runner. The process backend requires a
+picklable objective (it is shipped once per worker via the pool initializer);
+use it for objectives that hold the GIL, e.g. in-process compile jobs.
+"""
+from __future__ import annotations
+
+import json
+import math
+import multiprocessing as mp
+import os
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, ProcessPoolExecutor, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Deque, Dict, Optional
+
+import numpy as np
+
+from repro.core.objectives import Objective
+from repro.core.runner import TuneResult, TuningRun
+from repro.core.strategies.base import Proposal, Strategy, StrategyContext
+
+_PROC_OBJECTIVE: Optional[Objective] = None
+
+
+def _proc_init(objective: Objective) -> None:
+    global _PROC_OBJECTIVE
+    _PROC_OBJECTIVE = objective
+
+
+def _proc_eval(idx: int):
+    t0 = time.time()
+    v = _PROC_OBJECTIVE(idx)
+    return v, time.time() - t0, f"pid-{os.getpid()}"
+
+
+@dataclass
+class WorkerStats:
+    n_evals: int = 0
+    busy_s: float = 0.0
+
+
+@dataclass
+class _Pending:
+    """One accepted proposal awaiting record+tell, in acceptance order."""
+    proposal: Proposal
+    key: str
+    idx: Optional[int]
+    primary: bool                      # this entry owns the journal record
+    future: Optional[Future] = None    # set when dispatched to the pool
+    dup_of: Optional["_Pending"] = None  # in-flight dedup target
+    resolved: bool = False
+    value: float = math.nan
+    dur: float = 0.0
+    worker: str = "main"
+
+    def ready(self) -> bool:
+        if self.resolved:
+            return True
+        if self.future is not None:
+            return self.future.done()
+        if self.dup_of is not None:
+            return self.dup_of.resolved
+        return False
+
+
+class ParallelTuningEngine:
+    def __init__(self, objective: Objective, budget: int, *,
+                 batch_size: int = 1, workers: int = 1,
+                 max_in_flight: Optional[int] = None,
+                 backend: str = "thread",
+                 max_total_calls: Optional[int] = None,
+                 checkpoint_path: Optional[str] = None):
+        if backend not in ("thread", "process"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.objective = objective
+        self.budget = budget
+        self.batch_size = max(int(batch_size), 1)
+        self.workers = max(int(workers), 1)
+        self.max_in_flight = max(max_in_flight or max(self.workers,
+                                                      self.batch_size), 1)
+        self.backend = backend
+        self.max_total_calls = max_total_calls
+        self.checkpoint_path = checkpoint_path
+        self.worker_stats: Dict[str, WorkerStats] = {}
+
+    # ------------------------------------------------------------------
+    def run(self, strategy: Strategy, seed: int = 0,
+            resume: bool = False) -> TuneResult:
+        run = TuningRun(self.objective, self.budget,
+                        max_total_calls=self.max_total_calls,
+                        checkpoint_path=self.checkpoint_path)
+        if resume:
+            run.resume()
+        rng = np.random.default_rng(seed)
+        strategy.reset(StrategyContext(
+            space=run.space, budget=self.budget, rng=rng,
+            replayed=tuple((o.idx, o.value) for o in run.journal)))
+        self.worker_stats = {}
+        t0 = time.time()
+        pool = None
+        if self.workers > 1:
+            if self.backend == "thread":
+                pool = ThreadPoolExecutor(self.workers,
+                                          thread_name_prefix="tuner")
+            else:
+                # spawn, not fork: the parent holds JAX's thread pools and a
+                # forked child can deadlock inside them
+                pool = ProcessPoolExecutor(
+                    self.workers, mp_context=mp.get_context("spawn"),
+                    initializer=_proc_init, initargs=(self.objective,))
+        try:
+            self._loop(strategy, run, pool)
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=False, cancel_futures=True)
+        best_idx, best_val = run.best()
+        return TuneResult(strategy=strategy.name, objective=run.objective.name,
+                          best_idx=best_idx, best_value=best_val,
+                          trace=run.best_trace(),
+                          unique_evals=run.unique_evals,
+                          wall_time_s=time.time() - t0, journal=run.journal,
+                          worker_stats={k: vars(v).copy() for k, v
+                                        in self.worker_stats.items()})
+
+    # ------------------------------------------------------------------
+    def _loop(self, strategy: Strategy, run: TuningRun, pool) -> None:
+        pending: Deque[_Pending] = deque()
+        in_flight: Dict[str, _Pending] = {}
+        stop = False
+        while True:
+            exhausted = False
+            if not stop and len(pending) < self.max_in_flight:
+                want = min(self.batch_size,
+                           self.max_in_flight - len(pending))
+                props = strategy.suggest(want)
+                if not props:
+                    exhausted = True
+                for p in props:
+                    if not self._accept(p, run, pool, pending, in_flight):
+                        stop = True     # budget / total-call cap reached
+                        break
+            if not pending:
+                # either the run is over (stop/exhausted) or every accept
+                # above appended an entry — nothing to spin-wait on
+                break
+            # drain the head (blocking), then any already-finished successors,
+            # so the journal and the tells stay in acceptance order
+            self._settle(pending.popleft(), run, in_flight, strategy)
+            while pending and pending[0].ready():
+                self._settle(pending.popleft(), run, in_flight, strategy)
+
+    # ------------------------------------------------------------------
+    def _accept(self, p: Proposal, run: TuningRun, pool,
+                pending: Deque[_Pending], in_flight: Dict[str, _Pending]) -> bool:
+        """Replicates TuningRun.evaluate/evaluate_config bookkeeping. Returns
+        False when the run must stop (budget or total-call cap)."""
+        if p.config is not None:
+            idx = run.space.index_of(p.config)
+            key = (str(int(idx)) if idx is not None
+                   else "cfg:" + json.dumps(p.config, sort_keys=True,
+                                            default=str))
+        else:
+            idx, key = int(p.idx), str(int(p.idx))
+        run.total_calls += 1
+        if key in run.cache:
+            if run.total_calls > run.max_total_calls:
+                return False
+            pending.append(_Pending(p, key, idx, primary=False, resolved=True,
+                                    value=run.cache[key]))
+            return True
+        if key in in_flight:
+            if run.total_calls > run.max_total_calls:
+                return False
+            pending.append(_Pending(p, key, idx, primary=False,
+                                    dup_of=in_flight[key]))
+            return True
+        if run.unique_evals + len(in_flight) >= run.budget:
+            return False
+        entry = _Pending(p, key, idx, primary=True)
+        if idx is None:
+            # outside the restricted space: recorded invalid, no objective call
+            entry.resolved, entry.value = True, math.nan
+        elif pool is None:
+            t_eval = time.time()
+            entry.value = run.objective(idx)
+            entry.dur = time.time() - t_eval
+            entry.resolved = True
+        else:
+            entry.future = (pool.submit(self._eval_threaded, idx)
+                            if self.backend == "thread"
+                            else pool.submit(_proc_eval, idx))
+        pending.append(entry)
+        in_flight[key] = entry
+        return True
+
+    def _eval_threaded(self, idx: int):
+        t0 = time.time()
+        v = self.objective(idx)
+        return v, time.time() - t0, threading.current_thread().name
+
+    # ------------------------------------------------------------------
+    def _settle(self, entry: _Pending, run: TuningRun,
+                in_flight: Dict[str, _Pending], strategy: Strategy) -> None:
+        if entry.future is not None:
+            entry.value, entry.dur, entry.worker = entry.future.result()
+            entry.resolved = True
+        elif entry.dup_of is not None:
+            # the primary was accepted earlier, so it settled earlier
+            entry.value, entry.resolved = entry.dup_of.value, True
+        if entry.primary:
+            run._record(entry.key, entry.idx, entry.value, entry.proposal.af)
+            obs = run.journal[-1]
+            obs.worker, obs.dur = entry.worker, entry.dur
+            in_flight.pop(entry.key, None)
+            ws = self.worker_stats.setdefault(entry.worker, WorkerStats())
+            ws.n_evals += 1
+            ws.busy_s += entry.dur
+        strategy.observe(entry.proposal, entry.value)

@@ -123,6 +123,23 @@ class GP:
         self.n += 1
         self.state = None
 
+    # -- speculative (fantasy) observations --------------------------------
+    def mark(self) -> int:
+        """Checkpoint before constant-liar/fantasy adds (batch suggestion)."""
+        self._mark_n = self.n
+        return self.n
+
+    def rollback(self) -> None:
+        """Discard every observation added since the last ``mark``. The padded
+        buffers keep the stale rows but the mask hides them from fit/predict."""
+        n0 = getattr(self, "_mark_n", None)
+        self._mark_n = None
+        if n0 is None or n0 >= self.n:
+            return
+        self.mask = self.mask.at[n0:self.n].set(False)
+        self.n = n0
+        self.state = None
+
     def fit(self) -> GPState:
         self.state = gp_fit(self.X, self.y, self.mask, kernel=self.kernel,
                             ell=self.ell, noise=self.noise)

@@ -24,8 +24,24 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+try:
+    from scipy.linalg import solve_triangular as _scipy_solve_triangular
+except ImportError:  # pragma: no cover - scipy is present in the image
+    _scipy_solve_triangular = None
+
 SQRT3 = math.sqrt(3.0)
 SQRT5 = math.sqrt(5.0)
+
+
+def forward_substitute(L: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Solve L x = b for lower-triangular L in O(t²) (generic solve is O(t³)).
+
+    The per-iteration delta over ``np.linalg.solve`` is recorded by
+    ``benchmarks/kernel_bench.py`` (gp/solve_triangular row).
+    """
+    if _scipy_solve_triangular is not None:
+        return _scipy_solve_triangular(L, b, lower=True, check_finite=False)
+    return np.linalg.solve(L, b)
 
 
 def kernel_np(name: str, r: np.ndarray, ell: float) -> np.ndarray:
@@ -61,6 +77,29 @@ class IncrementalGP:
         self.X = np.zeros((max_obs, self.dim))
         self.y = np.zeros(max_obs)
         self.t = 0
+        self._mark: Optional[Tuple[int, np.ndarray]] = None
+
+    # -- speculative (fantasy) observations -----------------------------------
+    def mark(self) -> int:
+        """Checkpoint before constant-liar/fantasy adds (batch suggestion).
+
+        ``rollback`` restores the exact pre-mark state: ssq is snapshotted
+        rather than decremented so floating-point round-trip error cannot
+        accumulate across repeated speculate/rollback cycles.
+        """
+        self._mark = (self.t, self.ssq.copy())
+        return self.t
+
+    def rollback(self) -> None:
+        """Discard every observation added since the last ``mark``."""
+        if self._mark is None:
+            return
+        t0, ssq0 = self._mark
+        # rows t0..t-1 of L/V/X/y are dead storage: the next add overwrites
+        # row t0 and solves only read the leading t×t / t×N blocks
+        self.t = t0
+        self.ssq = ssq0
+        self._mark = None
 
     # -- incremental update --------------------------------------------------
     def add(self, x, y_val: float):
@@ -73,7 +112,7 @@ class IncrementalGP:
                 np.sum((self.X[:t] - x[None, :]) ** 2, axis=1), 0.0))
             k_obs = kernel_np(self.kernel, r, self.ell)
             # forward substitution via the stored triangular factor
-            l = np.linalg.solve(self.L[:t, :t], k_obs)
+            l = forward_substitute(self.L[:t, :t], k_obs)
         else:
             l = np.zeros(0)
         d2 = 1.0 + self.noise - float(l @ l)
@@ -101,7 +140,7 @@ class IncrementalGP:
         y_std = float(yv.std())
         if y_std < 1e-12:
             y_std = 1.0
-        w = np.linalg.solve(self.L[:t, :t], (yv - y_mean) / y_std)
+        w = forward_substitute(self.L[:t, :t], (yv - y_mean) / y_std)
         mu = y_mean + y_std * (w @ self.V[:t])
         var = np.maximum(1.0 - self.ssq, 1e-12)
         return mu, np.sqrt(var) * y_std

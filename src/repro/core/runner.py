@@ -27,7 +27,10 @@ from repro.core.objectives import Objective
 
 
 class BudgetExhausted(Exception):
-    pass
+    """Raised by TuningRun's direct-evaluation API when the budget or the
+    total-call cap is hit. The ask/tell engine (repro.core.engine) never
+    raises it — it simply stops asking — but the exception remains for code
+    that drives a TuningRun by hand."""
 
 
 @dataclass
@@ -37,6 +40,8 @@ class Observation:
     value: float                # NaN = invalid
     af: Optional[str] = None    # acquisition function that proposed it
     t: float = 0.0
+    worker: str = "main"        # engine worker that ran the evaluation
+    dur: float = 0.0            # seconds spent in the objective call
 
 
 class TuningRun:
@@ -150,22 +155,23 @@ class TuneResult:
     unique_evals: int
     wall_time_s: float
     journal: List[Observation] = field(default_factory=list)
+    worker_stats: Dict[str, Dict] = field(default_factory=dict)
 
 
 def run_strategy(strategy, objective: Objective, budget: int,
                  seed: int = 0, checkpoint_path: Optional[str] = None,
-                 resume: bool = False) -> TuneResult:
-    run = TuningRun(objective, budget, checkpoint_path=checkpoint_path)
-    if resume:
-        run.resume()
-    rng = np.random.default_rng(seed)
-    t0 = time.time()
-    try:
-        strategy.run(run, rng)
-    except BudgetExhausted:
-        pass
-    best_idx, best_val = run.best()
-    return TuneResult(strategy=strategy.name, objective=objective.name,
-                      best_idx=best_idx, best_value=best_val,
-                      trace=run.best_trace(), unique_evals=run.unique_evals,
-                      wall_time_s=time.time() - t0, journal=run.journal)
+                 resume: bool = False, batch_size: int = 1, workers: int = 1,
+                 max_in_flight: Optional[int] = None,
+                 backend: str = "thread") -> TuneResult:
+    """Thin wrapper over the ask/tell engine (repro.core.engine).
+
+    The defaults (``batch_size=1, workers=1``) evaluate inline in this thread
+    and reproduce the historical sequential runner bit-for-bit; raise
+    ``workers``/``batch_size`` to parallelize the expensive compile-and-run
+    step."""
+    from repro.core.engine import ParallelTuningEngine
+    engine = ParallelTuningEngine(objective, budget, batch_size=batch_size,
+                                  workers=workers, max_in_flight=max_in_flight,
+                                  backend=backend,
+                                  checkpoint_path=checkpoint_path)
+    return engine.run(strategy, seed=seed, resume=resume)

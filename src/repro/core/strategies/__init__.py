@@ -1,4 +1,8 @@
-"""Search strategies: the paper's BO + Kernel Tuner baselines + framework analogues."""
+"""Search strategies: the paper's BO + Kernel Tuner baselines + framework
+analogues. All implement the ask/tell protocol (base.Strategy); they are
+driven by repro.core.engine.ParallelTuningEngine, never run standalone."""
+from repro.core.strategies.base import (GeneratorStrategy, Proposal, Strategy,
+                                        StrategyContext)
 from repro.core.strategies.baselines import (GeneticAlgorithm,
                                              MultiStartLocalSearch,
                                              RandomSearch, SimulatedAnnealing)

@@ -1,4 +1,4 @@
-"""The paper's Bayesian Optimization search strategy (§III).
+"""The paper's Bayesian Optimization search strategy (§III), ask/tell form.
 
 Structure (paper's contributions all present):
   * discrete normalized search space; acquisition optimized ONLY over
@@ -8,12 +8,23 @@ Structure (paper's contributions all present):
   * Matérn-3/2 GP, fixed lengthscale 2.0 (1.5 under contextual variance);
   * exploration factor: constant or Contextual Variance;
   * acquisition: ei | poi | lcb | multi | advanced_multi (Table I defaults).
+
+Beyond the paper (DESIGN.md §3–4): ``suggest(n)`` with n > 1 builds a batch
+by kriging-believer fantasies — each pick is speculatively added to the GP at
+its posterior mean, the acquisition is re-scored, and the speculative
+observations are rolled back once the batch is out the door. In-flight
+configs (suggested earlier, not yet observed) are fantasized the same way, so
+asynchronous engines never get duplicate suggestions and the batch spreads
+out instead of piling onto one optimum. At ``batch_size=1`` no speculation
+happens and the interaction sequence is bit-for-bit the sequential paper
+loop (pinned by the golden-trace tests).
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from collections import deque
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -21,7 +32,7 @@ from repro.core import acquisition as A
 from repro.core.gp import GP
 from repro.core.gp_fast import IncrementalGP
 from repro.core.lhs import initial_sample
-from repro.core.runner import BudgetExhausted, TuningRun
+from repro.core.strategies.base import Proposal, Strategy, StrategyContext
 
 
 @dataclass(frozen=True)
@@ -44,7 +55,8 @@ class BOConfig:
 
 
 class _EngineAdapter:
-    """Uniform .add / .predict_all / .y_std over both GP engines."""
+    """Uniform .add / .predict_all / .y_std / .mark / .rollback over both
+    GP engines."""
 
     def __init__(self, cfg: BOConfig, X_cand: np.ndarray, max_obs: int, ell: float):
         self.jax_mode = cfg.engine == "jax"
@@ -59,6 +71,12 @@ class _EngineAdapter:
     def add(self, x, y):
         self.gp.add(x, y)
 
+    def mark(self):
+        self.gp.mark()
+
+    def rollback(self):
+        self.gp.rollback()
+
     def predict_all(self):
         if self.jax_mode:
             mu, sigma = self.gp.predict(self.X_cand)
@@ -68,111 +86,192 @@ class _EngineAdapter:
     @property
     def y_std(self) -> float:
         if self.jax_mode:
-            self.gp.fit() if self.gp.state is None else None
+            if self.gp.state is None:
+                self.gp.fit()
             return float(self.gp.state.y_std)
         return self.gp.y_std
 
 
-class BOStrategy:
+class BOStrategy(Strategy):
     def __init__(self, cfg: BOConfig = BOConfig(), name: Optional[str] = None):
         self.cfg = cfg
         self.name = name or f"bo_{cfg.acquisition}"
 
-    # -----------------------------------------------------------------
-    def run(self, run: TuningRun, rng: np.random.Generator):
+    # -- lifecycle ----------------------------------------------------------
+    def reset(self, ctx: StrategyContext) -> None:
         cfg = self.cfg
-        space = run.space
+        self.space = ctx.space
+        self.rng = ctx.rng
         ell = (cfg.lengthscale_cv if cfg.exploration == "cv"
                else cfg.lengthscale)
-        gp = _EngineAdapter(cfg, space.X_norm, max_obs=run.budget, ell=ell)
-        evaluated = np.zeros(space.size, dtype=bool)
-
-        def observe(idx: int, value: float):
-            evaluated[idx] = True
-            if math.isfinite(value):
-                gp.add(space.X_norm[idx], value)
+        self.gp = _EngineAdapter(cfg, ctx.space.X_norm, max_obs=ctx.budget,
+                                 ell=ell)
+        self.evaluated = np.zeros(ctx.space.size, dtype=bool)
+        self.pending = np.zeros(ctx.space.size, dtype=bool)  # in flight
+        self.f_best = math.inf
+        self.controller: Optional[A.MultiAcquisition] = None
+        self.mu_s = 0.0
+        self.var_s = 0.0
 
         # resume support: absorb any journal replayed into the run
-        for o in run.journal:
-            if o.idx is not None:
-                observe(o.idx, o.value)
+        replayed_vals: List[float] = []
+        for idx, value in ctx.replayed:
+            if idx is not None:
+                self._absorb(int(idx), value)
+            if math.isfinite(value):
+                replayed_vals.append(value)
 
-        # ---- initial sample (LHS maximin + random repair) ----
-        n_init = max(cfg.initial_samples - int(evaluated.sum()), 0)
-        init_vals = []
-        if n_init > 0:
-            for idx in initial_sample(space, n_init, rng, maximin=cfg.maximin):
-                v = run.evaluate(idx, af="init")
-                observe(idx, v)
-                if math.isfinite(v):
-                    init_vals.append(v)
-            # paper: replace invalid draws with random samples until all valid
-            guard = 0
-            while len(init_vals) < n_init and guard < 20 * n_init:
-                guard += 1
-                idx = space.random_index(rng)
-                if evaluated[idx]:
-                    continue
-                v = run.evaluate(idx, af="init")
-                observe(idx, v)
-                if math.isfinite(v):
-                    init_vals.append(v)
+        self.n_init = max(cfg.initial_samples - int(self.evaluated.sum()), 0)
+        self.init_vals: List[float] = []
+        self._repair_guard = 0
+        self._init_outstanding = 0
+        if self.n_init > 0:
+            self._phase = "init"
+            self._init_queue = deque(
+                initial_sample(ctx.space, self.n_init, ctx.rng,
+                               maximin=cfg.maximin))
         else:
-            init_vals = [o.value for o in run.journal if math.isfinite(o.value)]
-        if not init_vals:  # pathological space: no valid init found
-            init_vals = [1.0]
-        mu_s = float(np.mean(init_vals))
+            self._phase = "init"      # finalized on first suggest()
+            self._init_queue = deque()
+            self.init_vals = replayed_vals
 
-        _, sigma0 = gp.predict_all()
-        var_s = float(np.mean(np.square(np.asarray(sigma0))))
+    def _absorb(self, idx: int, value: float):
+        self.evaluated[idx] = True
+        self.pending[idx] = False
+        if math.isfinite(value):
+            self.gp.add(self.space.X_norm[idx], value)
+            if value < self.f_best:
+                self.f_best = value
 
-        # ---- acquisition controller ----
-        mode = cfg.acquisition
-        controller = None
-        if mode in ("multi", "advanced_multi"):
-            controller = A.MultiAcquisition(
-                mode="advanced" if mode == "advanced_multi" else "multi",
+    def _finalize_init(self):
+        """Initial sample complete: fix μ_s, σ̄²_s, build the AF controller."""
+        cfg = self.cfg
+        if not self.init_vals:  # pathological space: no valid init found
+            self.init_vals = [1.0]
+        self.mu_s = float(np.mean(self.init_vals))
+        _, sigma0 = self.gp.predict_all()
+        self.var_s = float(np.mean(np.square(np.asarray(sigma0))))
+        if cfg.acquisition in ("multi", "advanced_multi"):
+            self.controller = A.MultiAcquisition(
+                mode="advanced" if cfg.acquisition == "advanced_multi"
+                else "multi",
                 order=cfg.af_order, skip_threshold=cfg.skip_threshold,
                 improvement_factor=cfg.improvement_factor,
                 discount=cfg.discount)
+        self._phase = "bo"
 
-        # ---- optimization loop ----
-        while True:
-            mu, sigma = gp.predict_all()
-            _, f_best = run.best()
-            if not math.isfinite(f_best):
-                f_best = mu_s
-            y_std = gp.y_std
+    # -- ask ----------------------------------------------------------------
+    def suggest(self, n: int) -> List[Proposal]:
+        if self._phase == "init":
+            props = self._suggest_init(n)
+            if props or self._phase == "init":
+                return props
+            # fell through to bo on this very call
+        return self._suggest_bo(n)
 
-            if cfg.exploration == "cv":
-                explore = A.contextual_variance(sigma[~evaluated], f_best,
-                                                mu_s, var_s)
-            else:
-                explore = float(cfg.exploration)
+    def _suggest_init(self, n: int) -> List[Proposal]:
+        out: List[Proposal] = []
+        while len(out) < n and self._init_queue:
+            idx = int(self._init_queue.popleft())
+            self.pending[idx] = True
+            self._init_outstanding += 1
+            out.append(Proposal(idx, af="init"))
+        # paper: replace invalid draws with random samples until all valid.
+        # Only once every earlier init proposal is observed do we know how
+        # many repairs are still owed (invalid draws in flight may yet fail).
+        if not out and self._init_outstanding == 0:
+            need = self.n_init - len(self.init_vals)
+            while (len(out) < min(n, max(need, 0))
+                   and self._repair_guard < 20 * self.n_init):
+                self._repair_guard += 1
+                idx = self.space.random_index(self.rng)
+                if self.evaluated[idx] or self.pending[idx]:
+                    continue
+                self.pending[idx] = True
+                self._init_outstanding += 1
+                out.append(Proposal(int(idx), af="init"))
+            if not out:  # init done (or guard exhausted) -> switch phase
+                self._finalize_init()
+        return out
 
-            def pick(af_name: str) -> int:
-                scores = A.af_scores(af_name, mu, sigma, f_best, explore, y_std)
-                scores = np.where(evaluated, -np.inf, scores)
-                return int(np.argmax(scores))
+    def _suggest_bo(self, n: int) -> List[Proposal]:
+        cfg = self.cfg
+        out: List[Proposal] = []
+        in_flight = np.flatnonzero(self.pending)
+        speculate = n > 1 or in_flight.size > 0
+        if speculate:
+            self.gp.mark()
+            if in_flight.size:
+                # fantasize in-flight configs at their posterior mean so an
+                # async engine never gets the same suggestion twice
+                mu0, _ = self.gp.predict_all()
+                for i in in_flight:
+                    self.gp.add(self.space.X_norm[i], float(mu0[i]))
+        try:
+            for j in range(n):
+                blocked = self.evaluated | self.pending
+                if blocked.all():
+                    break
+                mu, sigma = self.gp.predict_all()
+                f_best = self.f_best if math.isfinite(self.f_best) else self.mu_s
+                y_std = self.gp.y_std
 
-            if controller is None:
-                idx = pick(mode)
-                v = run.evaluate(idx, af=mode)
-                observe(idx, v)
-            elif controller.mode == "multi":
-                noms = {a.name: pick(a.name) for a in controller.active_afs()}
-                controller.register_duplicates(noms)
-                af = controller.next_af()
-                idx = noms.get(af.name, pick(af.name))
-                v = run.evaluate(idx, af=af.name)
-                observe(idx, v)
-                controller.record(af, v, math.isfinite(v))
-            else:  # advanced multi: only the evaluating AF predicts
-                af = controller.next_af()
-                idx = pick(af.name)
-                v = run.evaluate(idx, af=af.name)
-                observe(idx, v)
-                controller.record(af, v, math.isfinite(v))
+                if cfg.exploration == "cv":
+                    if speculate:
+                        explore = A.batch_contextual_variance(
+                            np.asarray(sigma), self.evaluated, self.pending,
+                            f_best, self.mu_s, self.var_s)
+                    else:
+                        explore = A.contextual_variance(
+                            sigma[~self.evaluated], f_best, self.mu_s,
+                            self.var_s)
+                else:
+                    explore = float(cfg.exploration)
 
-            if bool(evaluated.all()):
-                raise BudgetExhausted
+                def pick(af_name: str) -> int:
+                    scores = A.af_scores(af_name, mu, sigma, f_best, explore,
+                                         y_std)
+                    scores = np.where(blocked, -np.inf, scores)
+                    return int(np.argmax(scores))
+
+                controller = self.controller
+                if controller is None:
+                    af_name = cfg.acquisition
+                    idx = pick(af_name)
+                elif controller.mode == "multi":
+                    noms = {a.name: pick(a.name)
+                            for a in controller.active_afs()}
+                    controller.register_duplicates(noms)
+                    af = controller.next_af()
+                    af_name = af.name
+                    idx = noms.get(af.name, pick(af.name))
+                else:  # advanced multi: only the evaluating AF predicts
+                    af = controller.next_af()
+                    af_name = af.name
+                    idx = pick(af.name)
+
+                self.pending[idx] = True
+                out.append(Proposal(idx, af=af_name))
+                if j < n - 1:
+                    # kriging-believer fantasy for the remaining picks
+                    self.gp.add(self.space.X_norm[idx], float(mu[idx]))
+        finally:
+            if speculate:
+                self.gp.rollback()
+        return out
+
+    # -- tell ---------------------------------------------------------------
+    def observe(self, proposal: Proposal, value: float) -> None:
+        idx = proposal.idx
+        if idx is None:
+            return
+        self._absorb(idx, value)
+        if proposal.af == "init":
+            self._init_outstanding = max(self._init_outstanding - 1, 0)
+            if math.isfinite(value):
+                self.init_vals.append(value)
+        elif self.controller is not None:
+            af = next((a for a in self.controller.afs
+                       if a.name == proposal.af), None)
+            if af is not None:
+                self.controller.record(af, value, math.isfinite(value))

@@ -1,4 +1,4 @@
-"""Other-framework BO analogues (paper §IV-D).
+"""Other-framework BO analogues (paper §IV-D), ask/tell generator ports.
 
 The paper compares against the BayesianOptimization and scikit-optimize
 packages, whose defaults (a) cannot express search-space constraints — they
@@ -11,20 +11,24 @@ evaluations are imputed with a large penalty — distorting the surrogate
   * UCBSnapBO  ≈ BayesianOptimization defaults: UCB(κ=2.576)
   * GPHedgeSnapBO ≈ scikit-optimize defaults: GP-Hedge over (EI ξ=0.01,
     PI ξ=0.01, LCB κ=1.96), softmax gains
+
+These propose raw config dicts (``Proposal(config=...)``): the evaluator maps
+them back into the restricted space where possible and records NaN otherwise,
+so infeasible proposals waste budget — the paper's explanation for these
+frameworks' poor showing.
 """
 from __future__ import annotations
 
-import itertools
 import math
-from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Generator, List
 
 import numpy as np
 
 from repro.core import acquisition as A
 from repro.core.gp import GP
-from repro.core.runner import BudgetExhausted, TuningRun
-from repro.core.searchspace import Param, SearchSpace
+from repro.core.searchspace import SearchSpace
+from repro.core.strategies.base import (GeneratorStrategy, Proposal,
+                                        StrategyContext)
 
 
 def _unrestricted(space: SearchSpace) -> SearchSpace:
@@ -32,7 +36,7 @@ def _unrestricted(space: SearchSpace) -> SearchSpace:
     return SearchSpace(space.params, (), name=space.name + "_box")
 
 
-class _SnapBOBase:
+class _SnapBOBase(GeneratorStrategy):
     n_init: int = 20
     penalty_quantile: float = 0.99
 
@@ -43,18 +47,15 @@ class _SnapBOBase:
                  f_best: float, rng: np.random.Generator, it: int) -> int:
         raise NotImplementedError
 
-    def run(self, run: TuningRun, rng: np.random.Generator):
-        box = _unrestricted(run.space)
+    def proposals(self, ctx: StrategyContext) -> Generator[Proposal, float, None]:
+        rng = ctx.rng
+        box = _unrestricted(ctx.space)
         # continuous-snap duplicates make the kernel matrix singular — the
         # frameworks survive via jitter, so use a larger noise term here
-        gp = GP(box.dim, max_obs=run.budget + 8, kernel="matern52", ell=1.0,
+        gp = GP(box.dim, max_obs=ctx.budget + 8, kernel="matern52", ell=1.0,
                 noise=1e-4)
         evaluated = np.zeros(box.size, dtype=bool)
         values: List[float] = []
-
-        def evaluate_box_idx(bidx: int) -> float:
-            cfg = box.config(bidx)
-            return run.evaluate_config(cfg, af=self.name)
 
         def observe(bidx: int, v: float):
             evaluated[bidx] = True
@@ -72,7 +73,8 @@ class _SnapBOBase:
             bidx = box.random_index(rng)
             if evaluated[bidx]:
                 continue
-            observe(bidx, evaluate_box_idx(bidx))
+            v = yield Proposal(config=box.config(bidx), af=self.name)
+            observe(bidx, v)
 
         it = 0
         while True:
@@ -80,7 +82,8 @@ class _SnapBOBase:
             gp.fit()
             f_best = min(values) if values else 1e6
             bidx = self._propose(gp, box, evaluated, f_best, rng, it)
-            observe(bidx, evaluate_box_idx(bidx))
+            v = yield Proposal(config=box.config(bidx), af=self.name)
+            observe(bidx, v)
 
 
 class UCBSnapBO(_SnapBOBase):
@@ -109,6 +112,10 @@ class GPHedgeSnapBO(_SnapBOBase):
         self.eta = eta
         self.gains = np.zeros(3)
         self.name = "skopt_gphedge"
+
+    def reset(self, ctx: StrategyContext) -> None:
+        self.gains = np.zeros(3)   # fresh hedge state per run
+        super().reset(ctx)
 
     def _propose(self, gp, box, evaluated, f_best, rng, it):
         cand = rng.random((2048, box.dim)).astype(np.float32)

@@ -17,7 +17,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig4,fig5,fig6_7,"
-                         "table1,kernels,roofline,perf,engine")
+                         "table1,kernels,roofline,perf,engine,space")
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--workers", type=int, default=1,
                     help="parallel evaluation workers for every tuning run "
@@ -27,7 +27,7 @@ def main() -> None:
     from benchmarks import (common, engine_bench, fig1_comparison,
                             fig4_extended, fig5_frameworks, fig6_7_unseen,
                             kernel_bench, perf_hillclimb, roofline_table,
-                            table1_hyperparams)
+                            space_bench, table1_hyperparams)
 
     common.WORKERS = max(args.workers, 1)
     common.BATCH_SIZE = max(args.workers, 1)
@@ -42,6 +42,7 @@ def main() -> None:
         "roofline": (roofline_table.main, 0),
         "perf": (perf_hillclimb.main, 0),
         "engine": (engine_bench.main, 3),
+        "space": (space_bench.main, 0),
     }
     only = args.only.split(",") if args.only else list(suite)
     for name in only:

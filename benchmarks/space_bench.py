@@ -1,0 +1,156 @@
+"""Search-space layer scaling: enumeration throughput + neighbor latency.
+
+The vectorized constraint layer's acceptance bar (ISSUE 2): a constrained
+space with a >=10^7 Cartesian product must enumerate in seconds. For each
+space size this measures
+
+  * chunked vectorized enumeration + VectorConstraint filtering (configs/s),
+    against the seed's itertools.product + per-row Python loop where that
+    is still affordable (reference capped at 10^6 cartesian);
+  * Hamming neighbor queries: CSR-index build + per-query slice latency on
+    spaces small enough for the precomputed index, per-query vectorized
+    on-demand latency above that, against the seed's tuple-dict probes;
+  * config lookup (index_of) via sorted mixed-radix codes.
+
+Results land in results/bench/space_scaling.json.
+
+  PYTHONPATH=src python -m benchmarks.space_bench [--small]
+  PYTHONPATH=src python -m benchmarks.run --only space
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.searchspace import Param, SearchSpace, VectorConstraint
+
+#: (values per param, params): cartesian grows from CI-smoke to the 10^7 bar
+GRID_SMALL = [(10, 4), (18, 4)]                  # 1.0e4, 1.05e5
+GRID_FULL = GRID_SMALL + [(32, 4), (8, 8)]       # + 1.05e6, 1.68e7
+REFERENCE_MAX = 1_050_000                        # python loop above: minutes
+N_NEIGHBOR_QUERIES = 512
+
+
+def _params(k: int, d: int):
+    return [Param(f"p{j}", tuple(range(1, k + 1))) for j in range(d)]
+
+
+def _constraint_fns(k: int):
+    """Two restrictions keeping roughly half the space, numpy-elementwise so
+    the same lambdas serve the vectorized and the per-row reference path."""
+    cap = (k * k) // 2
+    return [lambda c: c["p0"] * c["p1"] <= cap,
+            lambda c: (c["p2"] + c["p3"]) % 4 != 0]
+
+
+def _reference_enumerate(params, cons):
+    """The seed implementation, kept as the throughput baseline."""
+    kept = []
+    for idx_tuple in itertools.product(*[range(len(p.values)) for p in params]):
+        cfg = {p.name: p.values[idx_tuple[j]] for j, p in enumerate(params)}
+        if all(c(cfg) for c in cons):
+            kept.append(idx_tuple)
+    return np.asarray(kept, dtype=np.int32)
+
+
+def _time_queries(space: SearchSpace, rng: np.random.Generator, n: int):
+    ids = rng.integers(0, space.size, size=n)
+    t0 = time.perf_counter()
+    total = 0
+    for i in ids:
+        total += len(space.hamming_neighbors(int(i)))
+    return (time.perf_counter() - t0) / n, total / n
+
+
+def _time_dict_probes(space: SearchSpace, rng: np.random.Generator, n: int):
+    """Seed-style neighbor queries: tuple dict + per-candidate probes."""
+    lookup = {tuple(row): i for i, row in enumerate(space.value_indices)}
+    ids = rng.integers(0, space.size, size=n)
+    t0 = time.perf_counter()
+    for i in ids:
+        row = space.value_indices[int(i)]
+        out = []
+        for j, p in enumerate(space.params):
+            for v in range(len(p.values)):
+                if v == row[j]:
+                    continue
+                k = lookup.get(tuple(row[:j]) + (v,) + tuple(row[j + 1:]))
+                if k is not None:
+                    out.append(k)
+    return (time.perf_counter() - t0) / n
+
+
+def main(repeats: int = 0, *, small: bool = False) -> None:
+    # `repeats` honors the benchmarks.run suite convention (fn(reps) for a
+    # global --repeats override); enumeration timings are single-shot, so
+    # extra repeats only re-run the grid and keep the last measurement.
+    del repeats
+    rng = np.random.default_rng(0)
+    rows = []
+    for k, d in (GRID_SMALL if small else GRID_FULL):
+        params = _params(k, d)
+        cons = [VectorConstraint(fn) for fn in _constraint_fns(k)]
+        t0 = time.perf_counter()
+        space = SearchSpace(params, cons, name=f"bench_{k}x{d}")
+        t_enum = time.perf_counter() - t0
+        row = {"cartesian": space.cartesian_size, "constrained": space.size,
+               "params": d, "values_per_param": k,
+               "enumerate_s": t_enum,
+               "configs_per_s": space.cartesian_size / max(t_enum, 1e-9)}
+
+        if space.cartesian_size <= REFERENCE_MAX:
+            t0 = time.perf_counter()
+            ref = _reference_enumerate(params, _constraint_fns(k))
+            row["reference_python_s"] = time.perf_counter() - t0
+            row["speedup_vs_python"] = row["reference_python_s"] / max(t_enum, 1e-9)
+            assert len(ref) == space.size
+            t0 = time.perf_counter()
+            row["dict_probe_query_s"] = _time_dict_probes(
+                space, rng, min(N_NEIGHBOR_QUERIES, 128))
+
+        # neighbor queries: first call may build the CSR index — time it apart
+        t0 = time.perf_counter()
+        space.hamming_neighbors(0)
+        row["neighbor_index_build_s"] = time.perf_counter() - t0
+        row["neighbor_index"] = ("csr" if space._h_csr is not None
+                                 else "on_demand")
+        q_s, deg = _time_queries(space, rng, N_NEIGHBOR_QUERIES)
+        row["neighbor_query_s"] = q_s
+        row["mean_degree"] = deg
+
+        ids = rng.integers(0, space.size, size=256)
+        cfgs = [space.config(int(i)) for i in ids]
+        t0 = time.perf_counter()
+        for cfg, i in zip(cfgs, ids):
+            assert space.index_of(cfg) == int(i)
+        row["index_of_s"] = (time.perf_counter() - t0) / len(cfgs)
+
+        rows.append(row)
+        emit(f"space/enum_{space.cartesian_size}", t_enum * 1e6,
+             f"{row['configs_per_s']:.0f}cfg/s")
+        emit(f"space/neighbors_{space.cartesian_size}", q_s * 1e6,
+             row["neighbor_index"])
+
+    biggest = rows[-1]
+    payload = {"rows": rows,
+               "acceptance": {
+                   "cartesian": biggest["cartesian"],
+                   "enumerate_s": biggest["enumerate_s"],
+                   "meets_1e7_in_seconds": (biggest["cartesian"] >= 10_000_000
+                                            and biggest["enumerate_s"] < 30.0)
+                   if not small else None}}
+    path = save_json("space_scaling", payload)
+    print(f"# wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke grid (cartesian <= ~1e5)")
+    args = ap.parse_args()
+    main(small=args.small)

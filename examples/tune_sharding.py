@@ -9,6 +9,15 @@ the config doesn't compile or doesn't fit HBM. This is the paper's problem
 
   PYTHONPATH=src python examples/tune_sharding.py \
       --arch internlm2-1.8b --shape train_4k --budget 10
+
+``--wide`` opens the full chunk-size grids (>2M cartesian configurations for
+MoE cells, enumerated in seconds by the vectorized constraint layer) and BO
+automatically switches to candidate-pool acquisition: each iteration scores
+a pool of incumbent neighborhoods + stratified draws instead of the whole
+space.
+
+  PYTHONPATH=src python examples/tune_sharding.py \
+      --arch qwen3-moe-30b-a3b --shape train_4k --budget 10 --wide
 """
 import argparse
 import os
@@ -17,7 +26,6 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.runner import run_strategy
-from repro.core.strategies import make_strategy
 from repro.core.strategies.bo import BOConfig, BOStrategy
 from repro.core.tuning_targets import DryRunObjective
 
@@ -33,19 +41,40 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--workers", type=int, default=1,
                     help="parallel compile evaluations (constant-liar batch)")
+    ap.add_argument("--wide", action="store_true",
+                    help="widened chunk-size grids (>2M cartesian for MoE "
+                         "cells) with vectorized constraints; BO scores a "
+                         "candidate pool instead of the full space")
     args = ap.parse_args()
 
-    obj = DryRunObjective(args.arch, args.shape, args.mesh)
+    obj = DryRunObjective(args.arch, args.shape, args.mesh, wide=args.wide)
     print(obj.space.describe())
+
+    cfg = BOConfig(acquisition=args.strategy, initial_samples=args.init)
+    strat = BOStrategy(cfg)
+    if cfg.pool_active(obj.space.size):
+        # incumbent Hamming neighborhoods + stratified draws (+ LHS refresh)
+        n_nbrs = sum(len(p.values) - 1 for p in obj.space.params)
+        per_round = (cfg.pool_size + cfg.pool_incumbents * n_nbrs
+                     + cfg.pool_lhs_points)
+        print(f"\ncandidate-pool acquisition: ~{per_round:,} configs scored "
+              f"per iteration vs {obj.space.size:,} in the restricted space "
+              f"(cartesian {obj.space.cartesian_size:,})")
+    else:
+        print(f"\nfull-space acquisition: all {obj.space.size:,} configs "
+              f"scored per iteration (cartesian {obj.space.cartesian_size:,})")
     print(f"budget {args.budget} compiles (cached in results/tune_cache)\n")
 
-    strat = BOStrategy(BOConfig(acquisition=args.strategy,
-                                initial_samples=args.init))
+    tag = f"{args.arch}_{args.shape}" + ("_wide" if args.wide else "")
     res = run_strategy(strat, obj, budget=args.budget, seed=args.seed,
                        workers=args.workers,
                        batch_size=max(args.workers, 1),
-                       checkpoint_path="results/tune_cache/"
-                       f"journal_{args.arch}_{args.shape}.json", resume=True)
+                       checkpoint_path=f"results/tune_cache/journal_{tag}.json",
+                       resume=True)
+    if res.best_idx is None:
+        print(f"\nno valid config found in {res.unique_evals} compiles — "
+              "raise --budget or inspect results/tune_cache for the errors")
+        return
     print(f"\nbest distribution config: {obj.space.config(res.best_idx)}")
     print(f"roofline step time: {res.best_value:.3f} s "
           f"({res.unique_evals} unique compiles)")

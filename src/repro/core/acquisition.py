@@ -110,6 +110,25 @@ def batch_contextual_variance(sigma: np.ndarray, evaluated: np.ndarray,
     return contextual_variance(sigma[free], f_best, mu_s, var_s)
 
 
+def pool_contextual_variance(sigma_pool: np.ndarray, f_best: float,
+                             mu_s: float, var_s: float) -> float:
+    """Contextual Variance from a candidate pool (DESIGN.md §10).
+
+    In pool mode the full-space posterior is never computed, so the mean
+    posterior variance in §III-F is *estimated* from the pool. The pool's
+    stratified-random component keeps the estimate representative of the
+    unevaluated space; incumbent-neighborhood members bias σ̄² slightly
+    downward (they sit near observations), which only makes λ a little more
+    conservative. ``sigma_pool`` must already exclude evaluated/pending
+    configs — pools are built that way — matching the sequential path's
+    exclusion of evaluated ones. ``var_s`` must come from the same estimator
+    at initial-sample time (a stratified draw scored once) so the ratio
+    λ = (σ̄²/ratio)/σ̄²_s compares like with like."""
+    if sigma_pool.size == 0:
+        return 0.01
+    return contextual_variance(sigma_pool, f_best, mu_s, var_s)
+
+
 @dataclass
 class AFStats:
     name: str

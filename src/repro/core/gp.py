@@ -20,6 +20,7 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 SQRT3 = math.sqrt(3.0)
 SQRT5 = math.sqrt(5.0)
@@ -150,3 +151,24 @@ class GP:
             self.fit()
         return gp_predict(self.state, jnp.asarray(Xc, jnp.float32),
                           kernel=self.kernel, ell=self.ell)
+
+    def predict_chunked(self, Xc, chunk: int = 8192):
+        """Posterior at arbitrary points, processed in fixed-size chunks (the
+        last one zero-padded) so ``gp_predict`` compiles once per chunk shape
+        instead of once per pool size (candidate-pool mode, DESIGN.md §10).
+        Returns NumPy arrays."""
+        Xc = np.asarray(Xc, np.float32)
+        m = Xc.shape[0]
+        if m == 0:
+            return np.zeros(0), np.zeros(0)
+        mus, sigmas = [], []
+        for lo in range(0, m, chunk):
+            block = Xc[lo:lo + chunk]
+            pad = chunk - block.shape[0]
+            if pad:
+                block = np.vstack(
+                    [block, np.zeros((pad, self.dim), np.float32)])
+            mu, sigma = self.predict(block)
+            mus.append(np.asarray(mu, np.float64))
+            sigmas.append(np.asarray(sigma, np.float64))
+        return np.concatenate(mus)[:m], np.concatenate(sigmas)[:m]

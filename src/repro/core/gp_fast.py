@@ -60,11 +60,19 @@ def kernel_np(name: str, r: np.ndarray, ell: float) -> np.ndarray:
 
 
 class IncrementalGP:
-    """Exact GP posterior over a FIXED candidate set, incremental in t."""
+    """Exact GP posterior over a FIXED candidate set, incremental in t.
 
-    def __init__(self, candidates: np.ndarray, max_obs: int,
+    For candidate-pool mode (DESIGN.md §10) pass ``candidates=None`` and
+    ``dim=``: no (max_obs, N) V panel is kept — ``add`` drops to O(t²) — and
+    the posterior is served on demand at arbitrary points by ``predict_at``,
+    chunked so huge pools never materialize an (m, t, d) tensor.
+    """
+
+    def __init__(self, candidates: Optional[np.ndarray], max_obs: int,
                  kernel: str = "matern32", ell: float = 2.0,
-                 noise: float = 1e-6):
+                 noise: float = 1e-6, dim: Optional[int] = None):
+        if candidates is None:
+            candidates = np.zeros((0, dim), np.float64)
         self.Xc = np.ascontiguousarray(candidates, np.float64)   # (N, d)
         self.N, self.dim = self.Xc.shape
         self.kernel = kernel
@@ -143,6 +151,39 @@ class IncrementalGP:
         w = forward_substitute(self.L[:t, :t], (yv - y_mean) / y_std)
         mu = y_mean + y_std * (w @ self.V[:t])
         var = np.maximum(1.0 - self.ssq, 1e-12)
+        return mu, np.sqrt(var) * y_std
+
+    # -- posterior at arbitrary points (candidate-pool mode) ------------------
+    def predict_at(self, X: np.ndarray,
+                   chunk: int = 65536) -> Tuple[np.ndarray, np.ndarray]:
+        """Chunked posterior mean/std at points ``X`` (m, d), independent of
+        the fixed candidate panel. O(t²·m) per call; memory O(t·chunk)."""
+        X = np.ascontiguousarray(X, np.float64)
+        m = len(X)
+        t = self.t
+        if t == 0:
+            return np.zeros(m), np.ones(m)
+        yv = self.y[:t]
+        y_mean = float(yv.mean())
+        y_std = float(yv.std())
+        if y_std < 1e-12:
+            y_std = 1.0
+        L = self.L[:t, :t]
+        w = forward_substitute(L, (yv - y_mean) / y_std)
+        Xo = self.X[:t]
+        o_sq = np.sum(Xo * Xo, axis=1)
+        mu = np.empty(m)
+        var = np.empty(m)
+        for lo in range(0, m, chunk):
+            B = X[lo:lo + chunk]
+            d2 = (np.sum(B * B, axis=1)[:, None] + o_sq[None, :]
+                  - 2.0 * (B @ Xo.T))
+            r = np.sqrt(np.maximum(d2, 0.0))
+            K = kernel_np(self.kernel, r, self.ell)          # (mc, t)
+            V = forward_substitute(L, K.T)                   # (t, mc)
+            mu[lo:lo + chunk] = y_mean + y_std * (w @ V)
+            var[lo:lo + chunk] = np.maximum(
+                1.0 - np.sum(V * V, axis=0), 1e-12)
         return mu, np.sqrt(var) * y_std
 
     @property

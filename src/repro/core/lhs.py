@@ -33,19 +33,36 @@ def lhs_unit(n: int, d: int, rng: np.random.Generator,
     return best
 
 
+#: Above this many configs, snapping falls back to one chunked batch pass
+#: (duplicate snaps are dropped and repaired randomly, like invalid draws)
+#: instead of n per-point full-space scans with exclusion. Set to the
+#: pre-refactor max_enumeration cap: every space that was constructible
+#: before the vectorized layer keeps its exact per-point path (and so its
+#: seeded initial sample); only newly-reachable larger spaces batch-snap.
+BATCH_SNAP_MIN_SIZE = 2_000_000
+
+
 def initial_sample(space: SearchSpace, n: int, rng: np.random.Generator,
                    is_valid=None, maximin: bool = True) -> List[int]:
     """n distinct config indices: LHS-snapped, invalid repaired randomly."""
     pts = lhs_unit(n, space.dim, rng, maximin_tries=10 if maximin else 1)
     chosen: List[int] = []
     seen: Set[int] = set()
-    for row in pts:
-        idx = space.nearest_index(row, exclude=seen)
-        if idx in seen or (is_valid is not None and not is_valid(idx)):
-            idx = None
-        if idx is not None:
+    if space.size > BATCH_SNAP_MIN_SIZE:
+        for idx in space.nearest_indices(pts):
+            idx = int(idx)
+            if idx in seen or (is_valid is not None and not is_valid(idx)):
+                continue
             seen.add(idx)
             chosen.append(idx)
+    else:
+        for row in pts:
+            idx = space.nearest_index(row, exclude=seen)
+            if idx in seen or (is_valid is not None and not is_valid(idx)):
+                idx = None
+            if idx is not None:
+                seen.add(idx)
+                chosen.append(idx)
     # random repair (paper: replace invalid samples with random samples
     # until all initial samples are valid)
     guard = 0

@@ -10,15 +10,36 @@ The paper's representation decisions, reproduced exactly:
   * constraints ("restrictions") filter the Cartesian product up front;
   * runtime-invalid configurations are a property of the *objective*, not the
     space — the tuner discovers them (§III-D2).
+
+Scale (DESIGN.md §9): enumeration is chunked + vectorized — each chunk of the
+Cartesian product is decoded arithmetically from its mixed-radix index (the
+same lexicographic order ``itertools.product`` produced, so config indices
+are stable across the refactor) and constraints declared as
+``VectorConstraint`` are evaluated on whole value columns at once. Plain
+``Constraint`` callables still work through a chunked per-row fallback.
+Config lookup runs on the sorted mixed-radix code array (binary search, no
+per-row tuple dict), and Hamming/adjacent neighborhoods are served from a
+lazily built CSR index (or computed per row, vectorized, above
+``csr_build_max`` configs).
 """
 from __future__ import annotations
 
-import itertools
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+#: Cartesian-product ceiling. Vectorized enumeration makes 10^7+ practical
+#: (benchmarks/space_bench.py); the cap only guards against runaway memory.
+DEFAULT_MAX_ENUMERATION = 20_000_000
+
+#: Rows decoded/filtered per enumeration chunk.
+ENUM_CHUNK = 1 << 17
+
+#: Spaces at most this large get a precomputed CSR neighbor index on first
+#: neighbor query; larger spaces answer each query vectorized on demand.
+CSR_BUILD_MAX = 1 << 18
 
 
 @dataclass(frozen=True)
@@ -33,49 +54,139 @@ class Param:
 Constraint = Callable[[Dict[str, Any]], bool]
 
 
+class VectorConstraint:
+    """A restriction evaluated on whole value columns at once.
+
+    ``fn`` receives a dict mapping parameter name -> value array (one entry
+    per candidate row of the current enumeration chunk) and returns a boolean
+    array. NumPy's elementwise semantics mean most scalar restrictions — e.g.
+    ``lambda c: c["MWG"] % (c["MDIMC"] * c["VWM"]) == 0`` — are already valid
+    column predicates; wrapping marks them safe to broadcast. The same ``fn``
+    serves scalar config dicts, so a VectorConstraint is a drop-in
+    ``Constraint`` everywhere one is accepted.
+    """
+
+    __slots__ = ("fn", "name")
+
+    def __init__(self, fn: Callable, name: Optional[str] = None):
+        self.fn = fn
+        self.name = name or getattr(fn, "__name__", "<lambda>")
+
+    def mask(self, cols: Dict[str, np.ndarray], n_rows: int) -> np.ndarray:
+        out = np.asarray(self.fn(cols))
+        if out.shape != (n_rows,):
+            raise ValueError(
+                f"VectorConstraint {self.name!r} returned shape {out.shape}, "
+                f"expected ({n_rows},) — not a column predicate")
+        return out.astype(bool, copy=False)
+
+    def __call__(self, cfg: Dict[str, Any]) -> bool:
+        return bool(self.fn(cfg))
+
+
 class SearchSpace:
     """Enumerated constrained space with ordinal-normalized coordinates."""
 
     def __init__(self, params: Sequence[Param],
                  constraints: Sequence[Constraint] = (),
-                 name: str = "space", max_enumeration: int = 2_000_000):
+                 name: str = "space",
+                 max_enumeration: int = DEFAULT_MAX_ENUMERATION,
+                 chunk_size: int = ENUM_CHUNK,
+                 csr_build_max: int = CSR_BUILD_MAX):
         self.name = name
         self.params: Tuple[Param, ...] = tuple(params)
         self.constraints = tuple(constraints)
-        cart = math.prod(len(p.values) for p in self.params)
+        self.dim = len(self.params)
+        self._csr_build_max = csr_build_max
+
+        nvals = np.array([len(p.values) for p in self.params], np.int64)
+        cart = math.prod(int(n) for n in nvals)
         if cart > max_enumeration:
             raise ValueError(f"{name}: cartesian product {cart} too large to enumerate")
         self.cartesian_size = cart
 
-        cols = []
-        for idx_tuple in itertools.product(*[range(len(p.values)) for p in self.params]):
-            cols.append(idx_tuple)
-        idx = np.asarray(cols, dtype=np.int32)
-        if self.constraints:
-            keep = np.ones(len(idx), dtype=bool)
-            for i, row in enumerate(idx):
-                cfgd = {p.name: p.values[row[j]] for j, p in enumerate(self.params)}
-                for c in self.constraints:
-                    if not c(cfgd):
-                        keep[i] = False
-                        break
-            idx = idx[keep]
+        # mixed-radix strides: the LAST parameter varies fastest, which is
+        # exactly itertools.product's lexicographic order — decoding ascending
+        # global indices g via (g // stride_j) % n_j reproduces the historical
+        # enumeration (and therefore every pinned config index) bit-for-bit.
+        strides = np.ones(self.dim, np.int64)
+        for j in range(self.dim - 2, -1, -1):
+            strides[j] = strides[j + 1] * nvals[j + 1]
+        self._nvals = nvals
+        self._strides = strides
+        self._value_arrays = [np.asarray(p.values) for p in self.params]
+
+        idx, codes = self._enumerate(chunk_size)
         self.value_indices = idx                     # (N, d) int32
+        self._codes = codes                          # (N,) int64, ascending
         self.size = len(idx)
-        self.dim = len(self.params)
         if self.size == 0:
             raise ValueError(f"{name}: all configurations violate constraints")
 
-        # ordinal normalization: value j of n -> j/(n-1)  (n==1 -> 0.5)
+        self.X_norm = self._normalize(idx)
+        self._h_csr: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._a_csr: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._row_sq: Optional[np.ndarray] = None   # lazy ||X_norm||² cache
+
+    # -- enumeration ---------------------------------------------------------
+    def _enumerate(self, chunk_size: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Chunked vectorized Cartesian product + constraint filtering."""
+        cart, d = self.cartesian_size, self.dim
+        kept_idx: List[np.ndarray] = []
+        kept_codes: List[np.ndarray] = []
+        for lo in range(0, cart, chunk_size):
+            g = np.arange(lo, min(lo + chunk_size, cart), dtype=np.int64)
+            idx = (g[:, None] // self._strides[None, :]) % self._nvals[None, :]
+            alive = np.arange(len(g))
+            # constraints run in declaration order on the surviving rows only,
+            # preserving the old per-row short-circuit semantics
+            for c in self.constraints:
+                if alive.size == 0:
+                    break
+                sub = idx[alive]
+                if isinstance(c, VectorConstraint):
+                    cols = {p.name: arr[sub[:, j]] for j, (p, arr) in
+                            enumerate(zip(self.params, self._value_arrays))}
+                    alive = alive[c.mask(cols, len(alive))]
+                else:  # plain callable: chunked per-row fallback
+                    ok = np.fromiter(
+                        (c({p.name: p.values[int(sub[i, j])]
+                            for j, p in enumerate(self.params)})
+                         for i in range(len(alive))),
+                        dtype=bool, count=len(alive))
+                    alive = alive[ok]
+            if alive.size:
+                kept_idx.append(idx[alive].astype(np.int32))
+                kept_codes.append(g[alive])
+        if not kept_idx:
+            return (np.zeros((0, d), np.int32), np.zeros(0, np.int64))
+        return np.vstack(kept_idx), np.concatenate(kept_codes)
+
+    def _normalize(self, idx: np.ndarray) -> np.ndarray:
+        """Ordinal normalization: value j of n -> j/(n-1)  (n==1 -> 0.5)."""
         denom = np.array([max(len(p.values) - 1, 1) for p in self.params],
                          dtype=np.float32)
-        self.X_norm = idx.astype(np.float32) / denom
+        X = idx.astype(np.float32) / denom
         for j, p in enumerate(self.params):
             if len(p.values) == 1:
-                self.X_norm[:, j] = 0.5
+                X[:, j] = 0.5
+        return X
 
-        self._lookup: Dict[Tuple[int, ...], int] = {
-            tuple(row): i for i, row in enumerate(idx)}
+    def take(self, keep: np.ndarray) -> "SearchSpace":
+        """Restrict the space to a sorted subset of its config indices
+        (deterministic trimming, repro.core.spaces._trim). In place."""
+        keep = np.asarray(keep)
+        if np.any(np.diff(self._codes[keep]) <= 0):
+            # checked before any mutation so a rejected call leaves the
+            # space untouched
+            raise ValueError("take() needs a sorted, duplicate-free subset: "
+                             "code lookups binary-search an ascending array")
+        self.value_indices = self.value_indices[keep]
+        self.X_norm = self.X_norm[keep]
+        self._codes = self._codes[keep]
+        self.size = len(self.value_indices)
+        self._h_csr = self._a_csr = self._row_sq = None
+        return self
 
     # -- config access ------------------------------------------------------
     def config(self, i: int) -> Dict[str, Any]:
@@ -85,40 +196,96 @@ class SearchSpace:
     def configs(self, ids: Sequence[int]) -> List[Dict[str, Any]]:
         return [self.config(i) for i in ids]
 
+    def _find_code(self, code: int) -> Optional[int]:
+        pos = int(np.searchsorted(self._codes, code))
+        if pos < self.size and self._codes[pos] == code:
+            return pos
+        return None
+
     def index_of(self, cfg: Dict[str, Any]) -> Optional[int]:
         try:
             key = tuple(p.values.index(cfg[p.name]) for p in self.params)
         except (ValueError, KeyError):
             return None
-        return self._lookup.get(key)
+        return self._find_code(sum(k * int(s) for k, s in zip(key, self._strides)))
+
+    def index_of_value_indices(self, row: Sequence[int]) -> Optional[int]:
+        """Row of per-param value ordinals -> config index (or None if the
+        combination was filtered out by the constraints)."""
+        return self._find_code(
+            sum(int(v) * int(s) for v, s in zip(row, self._strides)))
 
     # -- neighborhoods (Hamming: differ in exactly one parameter) -----------
+    def _hamming_candidates(self, rows: np.ndarray, codes: np.ndarray
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+        """(m,d) ordinal rows -> (m,K) candidate codes + validity, K = Σ n_j.
+        Column order is (param j asc, value v asc, v != row_j) — the exact
+        order the historical dict-probe loops produced."""
+        cand, valid = [], []
+        for j in range(self.dim):
+            vs = np.arange(self._nvals[j], dtype=np.int64)
+            cand.append(codes[:, None]
+                        + (vs[None, :] - rows[:, j:j + 1]) * self._strides[j])
+            valid.append(vs[None, :] != rows[:, j:j + 1])
+        return np.concatenate(cand, axis=1), np.concatenate(valid, axis=1)
+
+    def _adjacent_candidates(self, rows: np.ndarray, codes: np.ndarray
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """Column order (param j asc, dv in (-1, +1)), matching the old loop."""
+        cand, valid = [], []
+        for j in range(self.dim):
+            for dv in (-1, 1):
+                v = rows[:, j] + dv
+                cand.append((codes + dv * self._strides[j])[:, None])
+                valid.append(((v >= 0) & (v < self._nvals[j]))[:, None])
+        return np.concatenate(cand, axis=1), np.concatenate(valid, axis=1)
+
+    def _resolve_candidates(self, cand: np.ndarray, valid: np.ndarray
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+        """Candidate codes -> (found mask, positions), constraint-aware."""
+        pos = np.searchsorted(self._codes, cand)
+        pos_c = np.minimum(pos, self.size - 1)
+        found = valid & (self._codes[pos_c] == cand)
+        return found, pos_c
+
+    def _build_csr(self, candidates_fn, chunk: int = 1 << 14
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        counts = np.zeros(self.size, np.int64)
+        blocks: List[np.ndarray] = []
+        rows_all = self.value_indices.astype(np.int64)
+        for lo in range(0, self.size, chunk):
+            hi = min(lo + chunk, self.size)
+            cand, valid = candidates_fn(rows_all[lo:hi], self._codes[lo:hi])
+            found, pos = self._resolve_candidates(cand, valid)
+            counts[lo:hi] = found.sum(axis=1)
+            blocks.append(pos[found].astype(np.int32))  # row-major: per-row
+            #                                             column order kept
+        indptr = np.zeros(self.size + 1, np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        indices = (np.concatenate(blocks) if blocks
+                   else np.zeros(0, np.int32))
+        return indptr, indices
+
+    def _neighbors(self, i: int, candidates_fn, csr_attr: str) -> List[int]:
+        csr = getattr(self, csr_attr)
+        if csr is None and self.size <= self._csr_build_max:
+            csr = self._build_csr(candidates_fn)
+            setattr(self, csr_attr, csr)
+        if csr is not None:
+            indptr, indices = csr
+            return indices[indptr[i]:indptr[i + 1]].tolist()
+        # space too large for a precomputed index: one row, still vectorized
+        row = self.value_indices[i:i + 1].astype(np.int64)
+        cand, valid = candidates_fn(row, self._codes[i:i + 1])
+        found, pos = self._resolve_candidates(cand, valid)
+        return pos[found].tolist()
+
     def hamming_neighbors(self, i: int) -> List[int]:
-        row = self.value_indices[i]
-        out = []
-        for j, p in enumerate(self.params):
-            for v in range(len(p.values)):
-                if v == row[j]:
-                    continue
-                key = tuple(row[:j]) + (v,) + tuple(row[j + 1:])
-                k = self._lookup.get(key)
-                if k is not None:
-                    out.append(k)
-        return out
+        return self._neighbors(i, self._hamming_candidates, "_h_csr")
 
     def adjacent_neighbors(self, i: int) -> List[int]:
         """Differ in one parameter by one ordinal step (for local search)."""
-        row = self.value_indices[i]
-        out = []
-        for j in range(self.dim):
-            for dv in (-1, 1):
-                v = row[j] + dv
-                if 0 <= v < len(self.params[j].values):
-                    key = tuple(row[:j]) + (int(v),) + tuple(row[j + 1:])
-                    k = self._lookup.get(key)
-                    if k is not None:
-                        out.append(k)
-        return out
+        return self._neighbors(i, self._adjacent_candidates, "_a_csr")
 
     def random_index(self, rng: np.random.Generator) -> int:
         return int(rng.integers(0, self.size))
@@ -126,11 +293,37 @@ class SearchSpace:
     def nearest_index(self, x_norm: np.ndarray,
                       exclude: Optional[set] = None) -> int:
         """Snap a [0,1]^d point to the nearest enumerated config (L2)."""
-        d2 = np.sum((self.X_norm - x_norm[None, :]) ** 2, axis=1)
+        x = np.asarray(x_norm)
+        if x.dtype != self.X_norm.dtype:
+            # don't let a float64 query upcast the whole (N, d) matrix
+            x = x.astype(self.X_norm.dtype)
+        d2 = np.sum((self.X_norm - x[None, :]) ** 2, axis=1)
         if exclude:
-            d2 = d2.copy()
-            d2[list(exclude)] = np.inf
+            d2[list(exclude)] = np.inf   # d2 is a fresh buffer: no copy needed
         return int(np.argmin(d2))
+
+    def nearest_indices(self, X: np.ndarray, chunk: int = 1 << 16) -> np.ndarray:
+        """Batch nearest_index (no exclusion), chunked over the space so the
+        (q, N) distance matrix never materializes. Used by candidate-pool BO's
+        LHS refresh."""
+        X = np.asarray(X, self.X_norm.dtype)
+        if X.ndim == 1:
+            X = X[None, :]
+        q_sq = np.sum(X * X, axis=1)
+        if self._row_sq is None:
+            self._row_sq = np.sum(self.X_norm * self.X_norm, axis=1)
+        best_d = np.full(len(X), np.inf, np.float32)
+        best_i = np.zeros(len(X), np.int64)
+        for lo in range(0, self.size, chunk):
+            B = self.X_norm[lo:lo + chunk]
+            d2 = (q_sq[:, None] + self._row_sq[None, lo:lo + chunk]
+                  - 2.0 * (X @ B.T))                       # (q, m)
+            k = np.argmin(d2, axis=1)                      # row-contiguous
+            d = d2[np.arange(len(X)), k]
+            better = d < best_d
+            best_d[better] = d[better]
+            best_i[better] = lo + k[better]
+        return best_i
 
     def describe(self) -> str:
         lines = [f"SearchSpace {self.name}: {self.size} configs "

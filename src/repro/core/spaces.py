@@ -26,7 +26,7 @@ def _stable_hash(s: str) -> int:
     return zlib.crc32(s.encode())
 
 from repro.core.objectives import SimulatedObjective
-from repro.core.searchspace import Param, SearchSpace
+from repro.core.searchspace import Param, SearchSpace, VectorConstraint
 
 GPUS = ("gtx_titan_x", "rtx_2070_super", "a100")
 _GPU_SEED = {"gtx_titan_x": 101, "rtx_2070_super": 202, "a100": 303}
@@ -60,10 +60,10 @@ def gemm_space() -> SearchSpace:
     # paper's full set lands at 17956 — we trim deterministically to the
     # exact paper size (DESIGN.md §7.3).
     cons = [
-        lambda c: c["MWG"] % (c["MDIMC"] * c["VWM"]) == 0,
-        lambda c: c["NWG"] % (c["NDIMC"] * c["VWN"]) == 0,
-        lambda c: c["MWG"] % (c["MDIMA"] * c["VWM"]) == 0,
-        lambda c: c["NWG"] % (c["NDIMB"] * c["VWN"]) == 0,
+        VectorConstraint(lambda c: c["MWG"] % (c["MDIMC"] * c["VWM"]) == 0),
+        VectorConstraint(lambda c: c["NWG"] % (c["NDIMC"] * c["VWN"]) == 0),
+        VectorConstraint(lambda c: c["MWG"] % (c["MDIMA"] * c["VWM"]) == 0),
+        VectorConstraint(lambda c: c["NWG"] % (c["NDIMB"] * c["VWN"]) == 0),
     ]
     return SearchSpace(params, cons, name="gemm")
 
@@ -83,9 +83,9 @@ def convolution_space(gpu: str = "gtx_titan_x") -> SearchSpace:
     ]
     lim = 1024 if gpu == "gtx_titan_x" else 768
     cons = [
-        lambda c: c["block_size_x"] * c["block_size_y"] <= lim,
-        lambda c: c["block_size_x"] * c["block_size_y"] >= 32,
-        lambda c: c["tile_size_x"] * c["tile_size_y"] <= 32,
+        VectorConstraint(lambda c: c["block_size_x"] * c["block_size_y"] <= lim),
+        VectorConstraint(lambda c: c["block_size_x"] * c["block_size_y"] >= 32),
+        VectorConstraint(lambda c: c["tile_size_x"] * c["tile_size_y"] <= 32),
     ]
     return SearchSpace(params, cons, name="convolution")
 
@@ -227,11 +227,7 @@ def _trim(space: SearchSpace, target: int, seed: int) -> SearchSpace:
         return space
     rng = np.random.default_rng(seed)
     keep = np.sort(rng.choice(space.size, size=target, replace=False))
-    space.value_indices = space.value_indices[keep]
-    space.X_norm = space.X_norm[keep]
-    space.size = target
-    space._lookup = {tuple(row): i for i, row in enumerate(space.value_indices)}
-    return space
+    return space.take(keep)
 
 
 def make_objective(kernel: str, gpu: str = "gtx_titan_x",

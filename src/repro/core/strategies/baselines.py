@@ -166,7 +166,7 @@ class GeneticAlgorithm(Strategy):
             for g in range(space.dim):
                 if rng.random() < self.mutation_rate:
                     child[g] = rng.integers(self.nvals[g])
-            idx = space._lookup.get(tuple(int(c) for c in child))
+            idx = space.index_of_value_indices(child)
             if idx is None:
                 # repair: nearest valid config to the infeasible child
                 x = child / np.array([max(n - 1, 1) for n in self.nvals])

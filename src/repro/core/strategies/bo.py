@@ -18,20 +18,28 @@ asynchronous engines never get duplicate suggestions and the batch spreads
 out instead of piling onto one optimum. At ``batch_size=1`` no speculation
 happens and the interaction sequence is bit-for-bit the sequential paper
 loop (pinned by the golden-trace tests).
+
+Candidate-pool mode (DESIGN.md §10): above ``pool_threshold`` configs the
+exhaustive per-iteration prediction is replaced by scoring a pool of
+incumbent neighborhoods + stratified random draws + a periodic LHS refresh,
+with the GP predicting only at pool points (chunked, no (max_obs, N)
+panel). Small spaces keep the full-space path untouched, so paper-parity
+results are unchanged.
 """
 from __future__ import annotations
 
+import heapq
 import math
 from collections import deque
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import acquisition as A
 from repro.core.gp import GP
 from repro.core.gp_fast import IncrementalGP
-from repro.core.lhs import initial_sample
+from repro.core.lhs import initial_sample, lhs_unit
 from repro.core.strategies.base import Proposal, Strategy, StrategyContext
 
 
@@ -52,21 +60,46 @@ class BOConfig:
     # "fast": incremental-Cholesky exact GP (beyond-paper, ~100x less work);
     # "jax": padded jit GP (the oracle; also what the Pallas kernel mirrors)
     engine: str = "fast"
+    # -- candidate-pool acquisition (DESIGN.md §10) --------------------------
+    pool_mode: str = "auto"               # "auto" | "full" | "pool"
+    pool_threshold: int = 100_000         # auto: pool above this many configs
+    pool_size: int = 2048                 # stratified random draws per round
+    pool_incumbents: int = 3              # best-k whose neighborhoods join
+    pool_lhs_every: int = 16              # LHS refresh cadence (rounds)
+    pool_lhs_points: int = 64
+    predict_chunk: int = 8192             # jax-engine pool prediction chunk
+
+    def pool_active(self, space_size: int) -> bool:
+        return (self.pool_mode == "pool"
+                or (self.pool_mode == "auto"
+                    and space_size > self.pool_threshold))
+
+
+def _stratified_indices(n: int, m: int, rng: np.random.Generator) -> np.ndarray:
+    """m draws, one uniform per equal-width stratum of [0, n) — spreads
+    coverage over the enumeration order (and so over the leading params)."""
+    m = min(m, n)
+    edges = np.linspace(0, n, m + 1).astype(np.int64)
+    return rng.integers(edges[:-1], np.maximum(edges[1:], edges[:-1] + 1))
 
 
 class _EngineAdapter:
-    """Uniform .add / .predict_all / .y_std / .mark / .rollback over both
-    GP engines."""
+    """Uniform .add / .predict_all / .predict_at / .y_std / .mark /
+    .rollback over both GP engines. ``X_cand=None`` selects candidate-pool
+    mode: no fixed candidate panel, prediction only at requested points."""
 
-    def __init__(self, cfg: BOConfig, X_cand: np.ndarray, max_obs: int, ell: float):
+    def __init__(self, cfg: BOConfig, X_cand: Optional[np.ndarray],
+                 max_obs: int, ell: float, dim: Optional[int] = None):
         self.jax_mode = cfg.engine == "jax"
         self.X_cand = X_cand
+        self._chunk = cfg.predict_chunk
         if self.jax_mode:
-            self.gp = GP(X_cand.shape[1], max_obs=max_obs, kernel=cfg.kernel,
+            d = X_cand.shape[1] if X_cand is not None else dim
+            self.gp = GP(d, max_obs=max_obs, kernel=cfg.kernel,
                          ell=ell, noise=cfg.noise)
         else:
             self.gp = IncrementalGP(X_cand, max_obs=max_obs, kernel=cfg.kernel,
-                                    ell=ell, noise=cfg.noise)
+                                    ell=ell, noise=cfg.noise, dim=dim)
 
     def add(self, x, y):
         self.gp.add(x, y)
@@ -82,6 +115,11 @@ class _EngineAdapter:
             mu, sigma = self.gp.predict(self.X_cand)
             return np.asarray(mu, np.float64), np.asarray(sigma, np.float64)
         return self.gp.predict()
+
+    def predict_at(self, X: np.ndarray):
+        if self.jax_mode:
+            return self.gp.predict_chunked(X, chunk=self._chunk)
+        return self.gp.predict_at(X)
 
     @property
     def y_std(self) -> float:
@@ -104,14 +142,23 @@ class BOStrategy(Strategy):
         self.rng = ctx.rng
         ell = (cfg.lengthscale_cv if cfg.exploration == "cv"
                else cfg.lengthscale)
-        self.gp = _EngineAdapter(cfg, ctx.space.X_norm, max_obs=ctx.budget,
-                                 ell=ell)
+        self.pool_on = cfg.pool_active(ctx.space.size)
+        if self.pool_on:
+            # no fixed candidate panel: an (max_obs, N) V matrix over a
+            # multi-million-config space would not fit in memory
+            self.gp = _EngineAdapter(cfg, None, max_obs=ctx.budget, ell=ell,
+                                     dim=ctx.space.dim)
+        else:
+            self.gp = _EngineAdapter(cfg, ctx.space.X_norm, max_obs=ctx.budget,
+                                     ell=ell)
         self.evaluated = np.zeros(ctx.space.size, dtype=bool)
         self.pending = np.zeros(ctx.space.size, dtype=bool)  # in flight
         self.f_best = math.inf
         self.controller: Optional[A.MultiAcquisition] = None
         self.mu_s = 0.0
         self.var_s = 0.0
+        self._finite_obs: List[Tuple[float, int]] = []   # (value, idx)
+        self._round = 0
 
         # resume support: absorb any journal replayed into the run
         replayed_vals: List[float] = []
@@ -140,6 +187,7 @@ class BOStrategy(Strategy):
         self.pending[idx] = False
         if math.isfinite(value):
             self.gp.add(self.space.X_norm[idx], value)
+            self._finite_obs.append((value, idx))
             if value < self.f_best:
                 self.f_best = value
 
@@ -149,7 +197,15 @@ class BOStrategy(Strategy):
         if not self.init_vals:  # pathological space: no valid init found
             self.init_vals = [1.0]
         self.mu_s = float(np.mean(self.init_vals))
-        _, sigma0 = self.gp.predict_all()
+        if self.pool_on:
+            # σ̄²_s estimated on a stratified draw — the same estimator every
+            # later pool round uses, so the contextual-variance ratio is
+            # like-for-like (acquisition.pool_contextual_variance)
+            probe = _stratified_indices(self.space.size,
+                                        max(self.cfg.pool_size, 256), self.rng)
+            _, sigma0 = self.gp.predict_at(self.space.X_norm[probe])
+        else:
+            _, sigma0 = self.gp.predict_all()
         self.var_s = float(np.mean(np.square(np.asarray(sigma0))))
         if cfg.acquisition in ("multi", "advanced_multi"):
             self.controller = A.MultiAcquisition(
@@ -167,6 +223,8 @@ class BOStrategy(Strategy):
             if props or self._phase == "init":
                 return props
             # fell through to bo on this very call
+        if self.pool_on:
+            return self._suggest_bo_pool(n)
         return self._suggest_bo(n)
 
     def _suggest_init(self, n: int) -> List[Proposal]:
@@ -255,6 +313,100 @@ class BOStrategy(Strategy):
                 if j < n - 1:
                     # kriging-believer fantasy for the remaining picks
                     self.gp.add(self.space.X_norm[idx], float(mu[idx]))
+        finally:
+            if speculate:
+                self.gp.rollback()
+        return out
+
+    # -- ask, candidate-pool mode (DESIGN.md §10) ---------------------------
+    def _build_pool(self) -> np.ndarray:
+        """Pool = incumbent Hamming neighborhoods + stratified random draws
+        (+ periodic LHS refresh), minus evaluated/pending configs."""
+        cfg, space, rng = self.cfg, self.space, self.rng
+        parts: List[np.ndarray] = []
+        if self._finite_obs and cfg.pool_incumbents > 0:
+            for _, i in heapq.nsmallest(cfg.pool_incumbents, self._finite_obs):
+                nbrs = space.hamming_neighbors(int(i))
+                if nbrs:
+                    parts.append(np.asarray(nbrs, np.int64))
+        parts.append(_stratified_indices(space.size, cfg.pool_size, rng))
+        if (cfg.pool_lhs_points > 0
+                and self._round % max(cfg.pool_lhs_every, 1) == 0):
+            pts = lhs_unit(cfg.pool_lhs_points, space.dim, rng,
+                           maximin_tries=1)
+            parts.append(space.nearest_indices(pts))
+        pool = np.unique(np.concatenate(parts))
+        pool = pool[~(self.evaluated[pool] | self.pending[pool])]
+        if pool.size == 0:
+            free = np.flatnonzero(~(self.evaluated | self.pending))
+            if free.size:
+                pool = rng.choice(free, size=min(cfg.pool_size, free.size),
+                                  replace=False)
+        return pool
+
+    def _suggest_bo_pool(self, n: int) -> List[Proposal]:
+        """Mirror of ``_suggest_bo`` that scores a candidate pool instead of
+        the whole space. All indices below are pool-local until mapped."""
+        cfg = self.cfg
+        out: List[Proposal] = []
+        self._round += 1
+        pool = self._build_pool()
+        if pool.size == 0:
+            return out
+        Xp = self.space.X_norm[pool]
+        in_flight = np.flatnonzero(self.pending)
+        speculate = n > 1 or in_flight.size > 0
+        if speculate:
+            self.gp.mark()
+            if in_flight.size:
+                mu0, _ = self.gp.predict_at(self.space.X_norm[in_flight])
+                for k, i in enumerate(in_flight):
+                    self.gp.add(self.space.X_norm[i], float(mu0[k]))
+        try:
+            alive = np.ones(pool.size, dtype=bool)
+            for j in range(n):
+                if not alive.any():
+                    break
+                mu, sigma = self.gp.predict_at(Xp)
+                f_best = self.f_best if math.isfinite(self.f_best) else self.mu_s
+                y_std = self.gp.y_std
+
+                if cfg.exploration == "cv":
+                    explore = A.pool_contextual_variance(
+                        sigma[alive], f_best, self.mu_s, self.var_s)
+                else:
+                    explore = float(cfg.exploration)
+
+                def pick(af_name: str) -> int:
+                    scores = A.af_scores(af_name, mu, sigma, f_best, explore,
+                                         y_std)
+                    scores = np.where(alive, scores, -np.inf)
+                    return int(np.argmax(scores))
+
+                controller = self.controller
+                if controller is None:
+                    af_name = cfg.acquisition
+                    k = pick(af_name)
+                elif controller.mode == "multi":
+                    noms = {a.name: pick(a.name)
+                            for a in controller.active_afs()}
+                    controller.register_duplicates(
+                        {name: int(pool[k2]) for name, k2 in noms.items()})
+                    af = controller.next_af()
+                    af_name = af.name
+                    k = noms.get(af.name, pick(af.name))
+                else:  # advanced multi: only the evaluating AF predicts
+                    af = controller.next_af()
+                    af_name = af.name
+                    k = pick(af.name)
+
+                idx = int(pool[k])
+                self.pending[idx] = True
+                alive[k] = False
+                out.append(Proposal(idx, af=af_name))
+                if j < n - 1:
+                    # kriging-believer fantasy for the remaining picks
+                    self.gp.add(self.space.X_norm[idx], float(mu[k]))
         finally:
             if speculate:
                 self.gp.rollback()

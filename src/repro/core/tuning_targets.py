@@ -23,31 +23,84 @@ import sys
 from typing import Any, Dict, List, Optional
 
 from repro.core.objectives import Objective
-from repro.core.searchspace import Param, SearchSpace
+from repro.core.searchspace import Param, SearchSpace, VectorConstraint
 from repro.launch.roofline import HBM_BYTES
 
 REPO = os.path.join(os.path.dirname(__file__), "..", "..", "..")
 
+#: Tokens per global batch for the train shapes — microbatching must divide it.
+GLOBAL_BATCH = 32
 
-def sharding_space(arch: str, shape: str) -> SearchSpace:
-    """Distribution knobs applicable to the given cell."""
+
+def sharding_space(arch: str, shape: str, wide: bool = False) -> SearchSpace:
+    """Distribution knobs applicable to the given cell.
+
+    ``wide=True`` opens the full chunk-size grids (cartesian >10^6, >2M for
+    MoE cells) with the physically-required combinations expressed as
+    vectorized ``VectorConstraint`` column predicates — the scale the old
+    per-row Python enumeration could not reach. The default narrow space is
+    unchanged, so existing tuning caches and journals stay valid.
+    """
+    if not wide:
+        params = [
+            Param("remat", ("none", "dots", "full")),
+            Param("attn_q_chunks", (1, 2, 4)),
+            Param("logits_chunk", (512, 2048, 8192)),
+            Param("attn_block_kv", (512, 1024, 2048)),
+            Param("flash", (1, 0)),   # 1: blockwise flash; 0: direct attention
+        ]
+        if shape == "train_4k":
+            params.append(Param("opt_moment_dtype", ("float32", "bfloat16")))
+            params.append(Param("microbatches", (1, 2, 4)))
+        if arch.startswith(("deepseek", "qwen3")):
+            params.append(Param("capacity_factor", (1.0, 1.25, 1.5)))
+            params.append(Param("experts_rule", ("model", "model+data")))
+        if arch.startswith("xlstm"):
+            params.append(Param("mlstm_chunk", (0, 32, 64, 128)))
+        params.append(Param("embed_rule", ("data", "none")))  # ZeRO-3 on/off
+        return SearchSpace(params, (), name=f"sharding[{arch}×{shape}]")
+
     params = [
         Param("remat", ("none", "dots", "full")),
-        Param("attn_q_chunks", (1, 2, 4)),
-        Param("logits_chunk", (512, 2048, 8192)),
-        Param("attn_block_kv", (512, 1024, 2048)),
-        Param("flash", (1, 0)),   # 1: blockwise flash; 0: direct attention
+        Param("attn_q_chunks", (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)),
+        Param("logits_chunk", (128, 192, 256, 384, 512, 768, 1024, 1536,
+                               2048, 3072, 4096, 6144, 8192, 12288, 16384,
+                               32768)),
+        Param("attn_block_kv", (128, 192, 256, 384, 512, 768, 1024, 1536,
+                                2048, 3072, 4096)),
+        Param("flash", (1, 0)),
+    ]
+    cons = [
+        # blockwise flash needs at least a 256-token KV block per grid step
+        VectorConstraint(lambda c: (c["flash"] == 0)
+                         | (c["attn_block_kv"] >= 256),
+                         name="flash_min_kv_block"),
+        # direct attention materializes the (q, kv) block: cap the KV tile
+        VectorConstraint(lambda c: (c["flash"] == 1)
+                         | (c["attn_block_kv"] <= 2048),
+                         name="direct_max_kv_block"),
+        # combined q-chunk × kv-block tiling degenerates past this product
+        VectorConstraint(lambda c: c["attn_q_chunks"] * c["attn_block_kv"]
+                         <= 32768, name="tile_product"),
     ]
     if shape == "train_4k":
         params.append(Param("opt_moment_dtype", ("float32", "bfloat16")))
-        params.append(Param("microbatches", (1, 2, 4)))
+        params.append(Param("microbatches", tuple(
+            m for m in (1, 2, 4, 8, 16, 32) if GLOBAL_BATCH % m == 0)))
+        # vacuous for the derived grid above; keeps the coupling declared if
+        # the grid is ever widened past the divisors
+        cons.append(VectorConstraint(
+            lambda c: GLOBAL_BATCH % c["microbatches"] == 0,
+            name="microbatch_divides_batch"))
     if arch.startswith(("deepseek", "qwen3")):
-        params.append(Param("capacity_factor", (1.0, 1.25, 1.5)))
+        params.append(Param("capacity_factor", (1.0, 1.1, 1.25, 1.5,
+                                                1.75, 2.0)))
         params.append(Param("experts_rule", ("model", "model+data")))
     if arch.startswith("xlstm"):
-        params.append(Param("mlstm_chunk", (0, 32, 64, 128)))
+        params.append(Param("mlstm_chunk", (0, 16, 32, 48, 64, 96, 128,
+                                            192, 256)))
     params.append(Param("embed_rule", ("data", "none")))  # ZeRO-3 on/off
-    return SearchSpace(params, (), name=f"sharding[{arch}×{shape}]")
+    return SearchSpace(params, cons, name=f"sharding_wide[{arch}×{shape}]")
 
 
 def _config_args(cfg: Dict[str, Any]) -> List[str]:
@@ -86,9 +139,10 @@ class DryRunObjective(Objective):
     def __init__(self, arch: str, shape: str, mesh: str = "single",
                  cache_dir: str = "results/tune_cache",
                  check_hbm: bool = True, timeout_s: int = 2400,
-                 repo_root: Optional[str] = None, verbose: bool = True):
+                 repo_root: Optional[str] = None, verbose: bool = True,
+                 wide: bool = False):
         self.arch, self.shape, self.mesh = arch, shape, mesh
-        self.space = sharding_space(arch, shape)
+        self.space = sharding_space(arch, shape, wide=wide)
         self.cache_dir = cache_dir
         self.check_hbm = check_hbm
         self.timeout_s = timeout_s

@@ -122,6 +122,8 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # jax<=0.4.x wraps it in a list
+            cost = cost[0] if cost else {}
         hlo_text = compiled.as_text()
         if save_hlo:
             Path(save_hlo).write_text(hlo_text)

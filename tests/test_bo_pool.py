@@ -1,0 +1,175 @@
+"""Candidate-pool acquisition (DESIGN.md §10): chunked prediction parity,
+pool construction invariants, and end-to-end pool-mode tuning runs."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.gp import GP
+from repro.core.gp_fast import IncrementalGP
+from repro.core.objectives import SimulatedObjective
+from repro.core.runner import run_strategy
+from repro.core.searchspace import Param, SearchSpace, VectorConstraint
+from repro.core.strategies.base import StrategyContext
+from repro.core.strategies.bo import BOConfig, BOStrategy, _stratified_indices
+
+
+def _space(k=12, d=4):
+    return SearchSpace([Param(f"p{j}", tuple(range(k))) for j in range(d)],
+                       [VectorConstraint(lambda c: (c["p0"] + c["p1"]) % 5 != 0)],
+                       name="pool")
+
+
+def _objective(space, seed=0, invalid_frac=0.1):
+    rng = np.random.default_rng(seed)
+    x = space.X_norm.astype(np.float64)
+    d = space.dim
+    times = (1.0 + 5 * ((x[:, 0] - 0.3) ** 2 + (x[:, 1 % d] - 0.7) ** 2)
+             + 0.3 * np.sin(7 * x[:, 2 % d]) * np.cos(5 * x[:, 3 % d]))
+    inv = rng.choice(space.size, int(invalid_frac * space.size), replace=False)
+    times[inv] = math.nan
+    return SimulatedObjective(space, times, name="pool_toy")
+
+
+# -- chunked posterior prediction parity -------------------------------------
+
+def test_incremental_gp_predict_at_matches_panel_predict():
+    rng = np.random.default_rng(0)
+    cand = rng.random((300, 5))
+    gp = IncrementalGP(cand, max_obs=40)
+    pool_gp = IncrementalGP(None, max_obs=40, dim=5)
+    for _ in range(25):
+        x = rng.random(5)
+        y = float(rng.normal())
+        gp.add(x, y)
+        pool_gp.add(x, y)
+    mu_ref, sig_ref = gp.predict()
+    mu, sig = pool_gp.predict_at(cand, chunk=64)   # force multiple chunks
+    np.testing.assert_allclose(mu, mu_ref, rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(sig, sig_ref, rtol=1e-8, atol=1e-10)
+
+
+def test_incremental_gp_predict_at_empty_and_prior():
+    gp = IncrementalGP(None, max_obs=10, dim=3)
+    mu, sig = gp.predict_at(np.random.default_rng(0).random((7, 3)))
+    np.testing.assert_array_equal(mu, np.zeros(7))   # prior mean
+    np.testing.assert_array_equal(sig, np.ones(7))   # unit prior std
+    mu, sig = gp.predict_at(np.zeros((0, 3)))
+    assert mu.shape == (0,) and sig.shape == (0,)
+
+
+def test_incremental_gp_predict_at_respects_mark_rollback():
+    rng = np.random.default_rng(1)
+    gp = IncrementalGP(None, max_obs=20, dim=4)
+    for _ in range(8):
+        gp.add(rng.random(4), float(rng.normal()))
+    probe = rng.random((50, 4))
+    mu0, sig0 = gp.predict_at(probe)
+    gp.mark()
+    gp.add(rng.random(4), 0.0)
+    mu1, _ = gp.predict_at(probe)
+    assert not np.allclose(mu1, mu0)
+    gp.rollback()
+    mu2, sig2 = gp.predict_at(probe)
+    np.testing.assert_array_equal(mu2, mu0)
+    np.testing.assert_array_equal(sig2, sig0)
+
+
+def test_jax_gp_predict_chunked_matches_predict():
+    rng = np.random.default_rng(2)
+    gp = GP(dim=4, max_obs=20)
+    for _ in range(12):
+        gp.add(rng.random(4), float(rng.normal()))
+    Xc = rng.random((133, 4)).astype(np.float32)
+    mu_ref, sig_ref = gp.predict(Xc)
+    mu, sig = gp.predict_chunked(Xc, chunk=32)     # uneven final chunk
+    np.testing.assert_allclose(mu, np.asarray(mu_ref), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(sig, np.asarray(sig_ref), rtol=1e-5, atol=1e-5)
+
+
+# -- pool construction -------------------------------------------------------
+
+def test_stratified_indices_cover_strata():
+    rng = np.random.default_rng(0)
+    idx = _stratified_indices(1000, 100, rng)
+    assert idx.shape == (100,)
+    assert np.all((idx >= 0) & (idx < 1000))
+    edges = np.linspace(0, 1000, 101).astype(np.int64)
+    assert np.all((idx >= edges[:-1]) & (idx < np.maximum(edges[1:],
+                                                          edges[:-1] + 1)))
+    # degenerate: more strata than configs
+    small = _stratified_indices(3, 10, rng)
+    assert np.all((small >= 0) & (small < 3))
+
+
+def test_build_pool_excludes_evaluated_and_pending():
+    space = _space()
+    strat = BOStrategy(BOConfig(pool_mode="pool", pool_size=128,
+                                pool_lhs_points=8, initial_samples=5))
+    strat.reset(StrategyContext(space=space, budget=50,
+                                rng=np.random.default_rng(0)))
+    strat.evaluated[:200] = True
+    strat.pending[200:400] = True
+    strat._finite_obs = [(1.0, 10), (2.0, 150)]
+    pool = strat._build_pool()
+    assert pool.size > 0
+    assert not strat.evaluated[pool].any()
+    assert not strat.pending[pool].any()
+    assert np.array_equal(pool, np.unique(pool))
+
+
+# -- end-to-end pool-mode runs ------------------------------------------------
+
+@pytest.mark.parametrize("acq", ["ei", "advanced_multi", "multi"])
+def test_pool_mode_run_valid_and_competitive(acq):
+    space = _space()
+    obj = _objective(space)
+    res = run_strategy(BOStrategy(BOConfig(acquisition=acq, pool_mode="pool",
+                                           pool_size=256, pool_lhs_points=16,
+                                           pool_lhs_every=8)),
+                       obj, budget=60, seed=0)
+    keys = [o.key for o in res.journal]
+    assert len(keys) == len(set(keys)), "pool mode re-proposed a config"
+    assert res.unique_evals <= 60
+    assert math.isfinite(res.best_value)
+    # easy smooth surface: pooled BO must land well under the median runtime
+    valid = obj.times[np.isfinite(obj.times)]
+    assert res.best_value < np.percentile(valid, 10)
+
+
+def test_pool_mode_batched_run_no_duplicates():
+    space = _space()
+    obj = _objective(space)
+    res = run_strategy(BOStrategy(BOConfig(pool_mode="pool", pool_size=256)),
+                       obj, budget=48, seed=1, batch_size=8, workers=4)
+    keys = [o.key for o in res.journal]
+    assert len(keys) == len(set(keys))
+    assert math.isfinite(res.best_value)
+
+
+def test_pool_auto_threshold_selects_mode():
+    space = _space()
+    ctx = StrategyContext(space=space, budget=30,
+                          rng=np.random.default_rng(0))
+    below = BOStrategy(BOConfig(pool_threshold=space.size + 1))
+    below.reset(ctx)
+    assert not below.pool_on
+    above = BOStrategy(BOConfig(pool_threshold=space.size - 1))
+    above.reset(StrategyContext(space=space, budget=30,
+                                rng=np.random.default_rng(0)))
+    assert above.pool_on
+
+
+def test_full_mode_untouched_by_pool_config():
+    """Small spaces stay on the exhaustive path: identical journals whatever
+    the pool knobs say (paper-parity results are pinned by golden traces)."""
+    space = SearchSpace([Param("a", tuple(range(15))),
+                         Param("b", tuple(range(15)))], name="tiny")
+    obj = _objective(space, invalid_frac=0.0)
+    r1 = run_strategy(BOStrategy(BOConfig(acquisition="ei")), obj,
+                      budget=35, seed=0)
+    r2 = run_strategy(BOStrategy(BOConfig(acquisition="ei", pool_size=17,
+                                          pool_lhs_points=3,
+                                          pool_incumbents=9)),
+                      obj, budget=35, seed=0)
+    assert [o.key for o in r1.journal] == [o.key for o in r2.journal]

@@ -1,11 +1,18 @@
-"""SearchSpace unit + hypothesis property tests."""
+"""SearchSpace unit tests + deterministic equivalence vs the seed reference.
+
+The pre-refactor implementation (itertools.product enumeration, per-row dict
+constraint calls with short-circuit, tuple-keyed dict for lookup and neighbor
+probes) is kept here verbatim as the order oracle: the vectorized layer must
+reproduce its output bit-for-bit, order included. Hypothesis variants of the
+equivalence properties live in test_searchspace_props.py (they skip cleanly
+when hypothesis is absent; these run everywhere).
+"""
+import itertools
+
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
-
-from repro.core.searchspace import Param, SearchSpace
+from repro.core.searchspace import Param, SearchSpace, VectorConstraint
 
 
 def small_space():
@@ -26,6 +33,15 @@ def test_enumeration_and_size():
 def test_constraints_filter():
     s = SearchSpace([Param("a", (1, 2, 4, 8)), Param("b", (1, 2, 4))],
                     [lambda c: c["a"] * c["b"] <= 8])
+    for i in range(s.size):
+        cfg = s.config(i)
+        assert cfg["a"] * cfg["b"] <= 8
+    assert s.size == 9
+
+
+def test_vector_constraints_filter():
+    s = SearchSpace([Param("a", (1, 2, 4, 8)), Param("b", (1, 2, 4))],
+                    [VectorConstraint(lambda c: c["a"] * c["b"] <= 8)])
     for i in range(s.size):
         cfg = s.config(i)
         assert cfg["a"] * cfg["b"] <= 8
@@ -78,42 +94,127 @@ def test_nearest_index_snaps_and_excludes():
     assert alt != 5
 
 
-# -- property tests ----------------------------------------------------------
-
-@st.composite
-def spaces(draw):
-    n_params = draw(st.integers(1, 4))
-    params = []
-    for j in range(n_params):
-        n_vals = draw(st.integers(1, 5))
-        params.append(Param(f"p{j}", tuple(range(n_vals))))
-    return SearchSpace(params, name="prop")
+def test_nearest_index_does_not_upcast_float64_query():
+    s = small_space()
+    assert s.nearest_index(s.X_norm[5].astype(np.float64)) == 5
 
 
-@given(spaces())
-@settings(max_examples=40, deadline=None)
-def test_prop_norm_bounds_and_lookup_total(s):
-    assert s.X_norm.shape == (s.size, s.dim)
-    assert float(s.X_norm.min()) >= 0.0
-    assert float(s.X_norm.max()) <= 1.0
-    # lookup is a bijection over enumerated configs
-    seen = {s.index_of(s.config(i)) for i in range(s.size)}
-    assert seen == set(range(s.size))
+def test_nearest_indices_batch_matches_single():
+    s = small_space()
+    rng = np.random.default_rng(3)
+    pts = rng.random((16, s.dim)).astype(np.float32)
+    batch = s.nearest_indices(pts, chunk=7)   # force multiple chunks
+    for k, row in enumerate(pts):
+        assert int(batch[k]) == s.nearest_index(row)
 
 
-@given(spaces(), st.integers(0, 10_000))
-@settings(max_examples=40, deadline=None)
-def test_prop_neighbors_symmetric(s, seed):
-    i = seed % s.size
-    for j in s.hamming_neighbors(i):
-        assert i in s.hamming_neighbors(j)
+def test_vector_constraint_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="column predicate"):
+        SearchSpace([Param("a", (1, 2, 3))],
+                    [VectorConstraint(lambda c: True)])
 
 
-@given(spaces(), st.data())
-@settings(max_examples=30, deadline=None)
-def test_prop_nearest_is_argmin(s, data):
-    x = np.array([data.draw(st.floats(0, 1)) for _ in range(s.dim)],
-                 np.float32)
-    i = s.nearest_index(x)
-    d = np.sum((s.X_norm - x[None]) ** 2, axis=1)
-    assert np.isclose(d[i], d.min())
+def test_take_subsets_and_keeps_lookup():
+    s = SearchSpace([Param("a", (1, 2, 4, 8)), Param("b", (1, 2, 4))])
+    keep = np.array([0, 2, 5, 7, 11])
+    cfgs = [s.config(int(i)) for i in keep]
+    s.take(keep)
+    assert s.size == 5
+    for i, cfg in enumerate(cfgs):
+        assert s.config(i) == cfg
+        assert s.index_of(cfg) == i
+
+
+# -- the seed's Python-loop reference (order oracle) -------------------------
+
+
+def reference_enumeration(params, constraints):
+    cols = []
+    for idx_tuple in itertools.product(*[range(len(p.values)) for p in params]):
+        cols.append(idx_tuple)
+    idx = np.asarray(cols, dtype=np.int32)
+    if constraints:
+        keep = np.ones(len(idx), dtype=bool)
+        for i, row in enumerate(idx):
+            cfgd = {p.name: p.values[row[j]] for j, p in enumerate(params)}
+            for c in constraints:
+                if not c(cfgd):
+                    keep[i] = False
+                    break
+        idx = idx[keep]
+    return idx
+
+
+def reference_hamming(params, idx, lookup, i):
+    row = idx[i]
+    out = []
+    for j, p in enumerate(params):
+        for v in range(len(p.values)):
+            if v == row[j]:
+                continue
+            k = lookup.get(tuple(row[:j]) + (v,) + tuple(row[j + 1:]))
+            if k is not None:
+                out.append(k)
+    return out
+
+
+def reference_adjacent(params, idx, lookup, i):
+    row = idx[i]
+    out = []
+    for j in range(len(params)):
+        for dv in (-1, 1):
+            v = row[j] + dv
+            if 0 <= v < len(params[j].values):
+                k = lookup.get(tuple(row[:j]) + (int(v),) + tuple(row[j + 1:]))
+                if k is not None:
+                    out.append(k)
+    return out
+
+
+def random_constrained_case(seed):
+    rng = np.random.default_rng(seed)
+    n_params = int(rng.integers(1, 5))
+    params = [Param(f"p{j}", tuple(range(1, int(rng.integers(1, 6)) + 1)))
+              for j in range(n_params)]
+    cap = int(rng.integers(2, 41))
+    mod = int(rng.integers(2, 4))
+    last = f"p{n_params - 1}"
+    # numpy-elementwise predicates: valid both per-row and per-column
+    cons = [lambda c: c["p0"] * c[last] <= cap,
+            lambda c: (c["p0"] + c[last]) % mod != 0]
+    return params, cons
+
+
+@pytest.mark.parametrize("seed", range(20))
+@pytest.mark.parametrize("chunk", [3, 16, 1 << 17])
+def test_enumeration_matches_python_loop_reference(seed, chunk):
+    params, cons = random_constrained_case(seed)
+    ref = reference_enumeration(params, cons)
+    if len(ref) == 0:
+        pytest.skip("all configs filtered")
+    for constraints in (cons,                                  # per-row path
+                        [VectorConstraint(c) for c in cons]):  # vector path
+        s = SearchSpace(params, constraints, name="ref", chunk_size=chunk)
+        assert s.size == len(ref)
+        np.testing.assert_array_equal(s.value_indices, ref)  # order included
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_neighbors_match_dict_probe_reference(seed):
+    params, cons = random_constrained_case(seed)
+    ref = reference_enumeration(params, cons)
+    if len(ref) == 0:
+        pytest.skip("all configs filtered")
+    lookup = {tuple(row): i for i, row in enumerate(ref)}
+    # csr_build_max=0 forces the on-demand path; default builds the CSR index
+    on_demand = SearchSpace(params, cons, name="od", csr_build_max=0)
+    csr = SearchSpace(params, cons, name="csr")
+    for i in range(len(ref)):
+        want_h = reference_hamming(params, ref, lookup, i)
+        want_a = reference_adjacent(params, ref, lookup, i)
+        assert csr.hamming_neighbors(i) == want_h          # order included
+        assert on_demand.hamming_neighbors(i) == want_h
+        assert csr.adjacent_neighbors(i) == want_a
+        assert on_demand.adjacent_neighbors(i) == want_a
+        assert csr.index_of_value_indices(ref[i]) == i
+        assert on_demand.index_of_value_indices(ref[i]) == i

@@ -1,0 +1,100 @@
+"""Hypothesis property tests for the vectorized search-space layer.
+
+Deterministic (seeded) variants of the equivalence tests run without
+hypothesis in test_searchspace.py; these explore the same properties over
+hypothesis-generated spaces when it is installed.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
+
+from repro.core.searchspace import Param, SearchSpace, VectorConstraint  # noqa: E402
+from test_searchspace import (reference_adjacent, reference_enumeration,  # noqa: E402
+                              reference_hamming)
+
+
+@st.composite
+def spaces(draw):
+    n_params = draw(st.integers(1, 4))
+    params = []
+    for j in range(n_params):
+        n_vals = draw(st.integers(1, 5))
+        params.append(Param(f"p{j}", tuple(range(n_vals))))
+    return SearchSpace(params, name="prop")
+
+
+@given(spaces())
+@settings(max_examples=40, deadline=None)
+def test_prop_norm_bounds_and_lookup_total(s):
+    assert s.X_norm.shape == (s.size, s.dim)
+    assert float(s.X_norm.min()) >= 0.0
+    assert float(s.X_norm.max()) <= 1.0
+    # lookup is a bijection over enumerated configs
+    seen = {s.index_of(s.config(i)) for i in range(s.size)}
+    assert seen == set(range(s.size))
+
+
+@given(spaces(), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_prop_neighbors_symmetric(s, seed):
+    i = seed % s.size
+    for j in s.hamming_neighbors(i):
+        assert i in s.hamming_neighbors(j)
+
+
+@given(spaces(), st.data())
+@settings(max_examples=30, deadline=None)
+def test_prop_nearest_is_argmin(s, data):
+    x = np.array([data.draw(st.floats(0, 1)) for _ in range(s.dim)],
+                 np.float32)
+    i = s.nearest_index(x)
+    d = np.sum((s.X_norm - x[None]) ** 2, axis=1)
+    assert np.isclose(d[i], d.min())
+
+
+@st.composite
+def constrained_cases(draw):
+    n_params = draw(st.integers(1, 4))
+    params = [Param(f"p{j}", tuple(range(1, draw(st.integers(1, 5)) + 1)))
+              for j in range(n_params)]
+    cap = draw(st.integers(2, 40))
+    mod = draw(st.integers(2, 3))
+    last = f"p{n_params - 1}"
+    # numpy-elementwise predicates: valid both per-row and per-column
+    cons = [lambda c, cap=cap, last=last: c["p0"] * c[last] <= cap,
+            lambda c, mod=mod, last=last: (c["p0"] + c[last]) % mod != 0]
+    return params, cons
+
+
+@given(constrained_cases(), st.sampled_from([3, 7, 16, 1 << 17]))
+@settings(max_examples=40, deadline=None)
+def test_prop_enumeration_matches_python_loop_reference(case, chunk):
+    params, cons = case
+    ref = reference_enumeration(params, cons)
+    assume(len(ref) > 0)
+    for constraints in (cons,                                  # per-row path
+                        [VectorConstraint(c) for c in cons]):  # vector path
+        s = SearchSpace(params, constraints, name="ref", chunk_size=chunk)
+        assert s.size == len(ref)
+        np.testing.assert_array_equal(s.value_indices, ref)  # order included
+
+
+@given(constrained_cases())
+@settings(max_examples=30, deadline=None)
+def test_prop_neighbors_match_dict_probe_reference(case):
+    params, cons = case
+    ref = reference_enumeration(params, cons)
+    assume(len(ref) > 0)
+    lookup = {tuple(row): i for i, row in enumerate(ref)}
+    on_demand = SearchSpace(params, cons, name="od", csr_build_max=0)
+    csr = SearchSpace(params, cons, name="csr")
+    for i in range(len(ref)):
+        want_h = reference_hamming(params, ref, lookup, i)
+        want_a = reference_adjacent(params, ref, lookup, i)
+        assert csr.hamming_neighbors(i) == want_h          # order included
+        assert on_demand.hamming_neighbors(i) == want_h
+        assert csr.adjacent_neighbors(i) == want_a
+        assert on_demand.adjacent_neighbors(i) == want_a
+        assert csr.index_of_value_indices(ref[i]) == i

@@ -101,6 +101,10 @@ _SUBPROCESS_COMPRESSION = textwrap.dedent("""
     import sys; sys.path.insert(0, "src")
     import jax, jax.numpy as jnp, numpy as np, json, functools
     from jax.sharding import PartitionSpec as P
+    try:
+        from jax import shard_map            # jax >= 0.6
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
     from repro.parallel.compression import compress_tree_psum
     mesh = jax.make_mesh((8,), ("pod",))
     g_global = np.random.default_rng(0).normal(size=(8, 64, 32)).astype(np.float32)
@@ -115,7 +119,7 @@ _SUBPROCESS_COMPRESSION = textwrap.dedent("""
 
     out = {}
     for method in ("none", "int8", "topk"):
-        fn = jax.jit(jax.shard_map(worker(method), mesh=mesh,
+        fn = jax.jit(shard_map(worker(method), mesh=mesh,
                                in_specs=(P("pod"), P()), out_specs=P("pod")))
         keys = jax.random.PRNGKey(0)
         red = np.asarray(fn(g_global, keys))

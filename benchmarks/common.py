@@ -24,6 +24,12 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 WORKERS = 1
 BATCH_SIZE = 1
 
+# Tuning-record store (repro.store) every matrix run journals into; set by
+# ``benchmarks.run --store PATH``. None disables persistence. Benchmark runs
+# never warm-start from it — paper-parity results must stay cold — they only
+# PRODUCE records (fig1/fig4/fig6_7 journals share the engine schema).
+STORE = None
+
 
 def emit(name: str, us_per_call: float, derived) -> None:
     """The run.py contract: ``name,us_per_call,derived`` CSV rows."""
@@ -34,10 +40,16 @@ def run_matrix(kernels: Sequence[str], gpu: str, strategies: Sequence[str],
                repeats: int, budget: int = 220,
                random_repeats: Optional[int] = None,
                workers: Optional[int] = None,
-               batch_size: Optional[int] = None) -> Dict:
+               batch_size: Optional[int] = None,
+               store=None) -> Dict:
     """Per (kernel, strategy): traces + mean MAE (paper methodology)."""
     workers = WORKERS if workers is None else workers
     batch_size = BATCH_SIZE if batch_size is None else batch_size
+    store = STORE if store is None else store
+    if isinstance(store, str):
+        # open once: a path per run would reload every segment per run
+        from repro.store import TuningRecordStore
+        store = TuningRecordStore(store)
     out: Dict[str, Dict[str, Dict]] = {}
     for kernel in kernels:
         obj = make_objective(kernel, gpu)
@@ -49,7 +61,8 @@ def run_matrix(kernels: Sequence[str], gpu: str, strategies: Sequence[str],
                 t0 = time.time()
                 res = run_strategy(make_strategy(strat), obj, budget=budget,
                                    seed=seed, workers=workers,
-                                   batch_size=batch_size)
+                                   batch_size=batch_size,
+                                   store=store, warm_start=False)
                 times.append(time.time() - t0)
                 traces.append(res.trace)
             maes = [mae(t, obj.optimum) for t in traces]

@@ -17,20 +17,27 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig4,fig5,fig6_7,"
-                         "table1,kernels,roofline,perf,engine,space")
+                         "table1,kernels,roofline,perf,engine,space,"
+                         "warm_start")
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--workers", type=int, default=1,
                     help="parallel evaluation workers for every tuning run "
                          "(1 = the bit-for-bit sequential path)")
+    ap.add_argument("--store", default=None,
+                    help="tuning-record store (dir) every matrix run "
+                         "journals into — fig1/fig4/fig6_7 results land in "
+                         "the same schema as engine checkpoints and golden "
+                         "traces (runs stay cold: no warm start)")
     args = ap.parse_args()
 
     from benchmarks import (common, engine_bench, fig1_comparison,
                             fig4_extended, fig5_frameworks, fig6_7_unseen,
                             kernel_bench, perf_hillclimb, roofline_table,
-                            space_bench, table1_hyperparams)
+                            space_bench, table1_hyperparams, warm_start)
 
     common.WORKERS = max(args.workers, 1)
     common.BATCH_SIZE = max(args.workers, 1)
+    common.STORE = args.store
 
     suite = {
         "fig1": (fig1_comparison.main, 7),
@@ -43,6 +50,7 @@ def main() -> None:
         "perf": (perf_hillclimb.main, 0),
         "engine": (engine_bench.main, 3),
         "space": (space_bench.main, 0),
+        "warm_start": (warm_start.main, 5),
     }
     only = args.only.split(",") if args.only else list(suite)
     for name in only:

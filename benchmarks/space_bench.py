@@ -29,9 +29,13 @@ import numpy as np
 from benchmarks.common import emit, save_json
 from repro.core.searchspace import Param, SearchSpace, VectorConstraint
 
-#: (values per param, params): cartesian grows from CI-smoke to the 10^7 bar
-GRID_SMALL = [(10, 4), (18, 4)]                  # 1.0e4, 1.05e5
-GRID_FULL = GRID_SMALL + [(32, 4), (8, 8)]       # + 1.05e6, 1.68e7
+#: (values per param, params, constrained): cartesian grows from CI-smoke to
+#: the 10^7 bar. The final unconstrained row keeps all 10^7 configs, which
+#: crosses X_NORM_LAZY_MIN: X_norm stays lazy (memory-curve row — the eager
+#: float32 matrix would be ~280 MB).
+GRID_SMALL = [(10, 4, True), (18, 4, True)]              # 1.0e4, 1.05e5
+GRID_FULL = GRID_SMALL + [(32, 4, True), (8, 8, True),   # + 1.05e6, 1.68e7
+                          (10, 7, False)]                # + 1.0e7 kept (lazy)
 REFERENCE_MAX = 1_050_000                        # python loop above: minutes
 N_NEIGHBOR_QUERIES = 512
 
@@ -92,16 +96,34 @@ def main(repeats: int = 0, *, small: bool = False) -> None:
     del repeats
     rng = np.random.default_rng(0)
     rows = []
-    for k, d in (GRID_SMALL if small else GRID_FULL):
+    for k, d, constrained in (GRID_SMALL if small else GRID_FULL):
         params = _params(k, d)
-        cons = [VectorConstraint(fn) for fn in _constraint_fns(k)]
+        cons = ([VectorConstraint(fn) for fn in _constraint_fns(k)]
+                if constrained else [])
         t0 = time.perf_counter()
         space = SearchSpace(params, cons, name=f"bench_{k}x{d}")
         t_enum = time.perf_counter() - t0
         row = {"cartesian": space.cartesian_size, "constrained": space.size,
                "params": d, "values_per_param": k,
                "enumerate_s": t_enum,
-               "configs_per_s": space.cartesian_size / max(t_enum, 1e-9)}
+               "configs_per_s": space.cartesian_size / max(t_enum, 1e-9),
+               # memory curve: eager X_norm is float32 (N, d); above
+               # X_NORM_LAZY_MIN rows are chunk-computed on demand instead
+               "x_norm_mode": "lazy" if space.x_norm_lazy else "eager",
+               "x_norm_resident_bytes": (0 if space.x_norm_lazy
+                                         else space.X_norm.nbytes),
+               "x_norm_eager_equiv_bytes": space.size * space.dim * 4}
+        if space.x_norm_lazy:
+            # the candidate-pool access pattern: gather a pool of rows +
+            # snap LHS points, all without materializing (N, d)
+            pool = rng.integers(0, space.size, size=2048)
+            t0 = time.perf_counter()
+            space.X_norm[pool]
+            row["x_norm_pool_gather_s"] = time.perf_counter() - t0
+            pts = rng.random((64, space.dim), dtype=np.float32)
+            t0 = time.perf_counter()
+            space.nearest_indices(pts)
+            row["nearest_indices_64_s"] = time.perf_counter() - t0
 
         if space.cartesian_size <= REFERENCE_MAX:
             t0 = time.perf_counter()
@@ -122,6 +144,17 @@ def main(repeats: int = 0, *, small: bool = False) -> None:
         q_s, deg = _time_queries(space, rng, N_NEIGHBOR_QUERIES)
         row["neighbor_query_s"] = q_s
         row["mean_degree"] = deg
+        if row["neighbor_index"] == "on_demand":
+            # local searches re-query the incumbent neighborhood: the partial
+            # CSR frontier over the visited region serves repeats from memo
+            ids = rng.integers(0, space.size, size=N_NEIGHBOR_QUERIES)
+            for i in ids:
+                space.hamming_neighbors(int(i))      # populate frontier
+            t0 = time.perf_counter()
+            for i in ids:
+                space.hamming_neighbors(int(i))      # repeat: cached
+            row["neighbor_query_cached_s"] = ((time.perf_counter() - t0)
+                                              / len(ids))
 
         ids = rng.integers(0, space.size, size=256)
         cfgs = [space.config(int(i)) for i in ids]

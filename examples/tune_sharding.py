@@ -28,6 +28,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core.runner import run_strategy
 from repro.core.strategies.bo import BOConfig, BOStrategy
 from repro.core.tuning_targets import DryRunObjective
+from repro.store import SpaceFingerprint, TuningRecordStore
 
 
 def main():
@@ -45,10 +46,23 @@ def main():
                     help="widened chunk-size grids (>2M cartesian for MoE "
                          "cells) with vectorized constraints; BO scores a "
                          "candidate pool instead of the full space")
+    ap.add_argument("--store", default="results/tune_store",
+                    help="shared tuning-record store: journals stream into "
+                         "it, prior records (any size/shape of this cell) "
+                         "warm-start the GP, and repro.launch.serve resolves "
+                         "its config from it")
+    ap.add_argument("--no-warm-start", action="store_true")
     args = ap.parse_args()
 
     obj = DryRunObjective(args.arch, args.shape, args.mesh, wide=args.wide)
     print(obj.space.describe())
+
+    store = TuningRecordStore(args.store)
+    fp = SpaceFingerprint.of(obj.space, objective=obj.name)
+    prior = store.best_config(fp)
+    if prior is not None:
+        cfgp, tp = prior
+        print(f"\nbest prior record for this cell: {tp:.3f}s {cfgp}")
 
     cfg = BOConfig(acquisition=args.strategy, initial_samples=args.init)
     strat = BOStrategy(cfg)
@@ -69,7 +83,8 @@ def main():
     res = run_strategy(strat, obj, budget=args.budget, seed=args.seed,
                        workers=args.workers,
                        batch_size=max(args.workers, 1),
-                       checkpoint_path=f"results/tune_cache/journal_{tag}.json",
+                       store=store, run_id=f"tune_{tag}-s{args.seed}",
+                       warm_start=not args.no_warm_start,
                        resume=True)
     if res.best_idx is None:
         print(f"\nno valid config found in {res.unique_evals} compiles — "
@@ -78,6 +93,9 @@ def main():
     print(f"\nbest distribution config: {obj.space.config(res.best_idx)}")
     print(f"roofline step time: {res.best_value:.3f} s "
           f"({res.unique_evals} unique compiles)")
+    print(f"records in {args.store}: {len(store)} — serve resolves with\n"
+          f"  python -m repro.launch.serve --arch {args.arch} --smoke "
+          f"--store {args.store} --tuned-shape {args.shape}")
 
 
 if __name__ == "__main__":

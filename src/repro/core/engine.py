@@ -43,6 +43,8 @@ import numpy as np
 from repro.core.objectives import Objective
 from repro.core.runner import TuneResult, TuningRun
 from repro.core.strategies.base import Proposal, Strategy, StrategyContext
+from repro.store.records import TuningRecordStore
+from repro.store.transfer import warm_matches
 
 _PROC_OBJECTIVE: Optional[Objective] = None
 
@@ -94,7 +96,9 @@ class ParallelTuningEngine:
                  max_in_flight: Optional[int] = None,
                  backend: str = "thread",
                  max_total_calls: Optional[int] = None,
-                 checkpoint_path: Optional[str] = None):
+                 checkpoint_path: Optional[str] = None,
+                 store=None, run_id: Optional[str] = None,
+                 context: str = "", warm_start: bool = True):
         if backend not in ("thread", "process"):
             raise ValueError(f"unknown backend {backend!r}")
         self.objective = objective
@@ -106,20 +110,45 @@ class ParallelTuningEngine:
         self.backend = backend
         self.max_total_calls = max_total_calls
         self.checkpoint_path = checkpoint_path
+        # shared record store (repro.store): journal persistence + transfer
+        self.store = (TuningRecordStore(store) if isinstance(store, str)
+                      else store)
+        self.run_id = run_id
+        self.context = context
+        self.warm_start = warm_start
         self.worker_stats: Dict[str, WorkerStats] = {}
 
     # ------------------------------------------------------------------
     def run(self, strategy: Strategy, seed: int = 0,
             resume: bool = False) -> TuneResult:
+        run_id = self.run_id or f"{strategy.name}-s{seed}"
+        if (not resume and self.store is None and self.checkpoint_path
+                and os.path.isfile(self.checkpoint_path)):
+            # a journal file is ONE run: a fresh (non-resume) run replaces a
+            # stale journal, exactly as the pre-store whole-JSON rewrite did
+            os.remove(self.checkpoint_path)
         run = TuningRun(self.objective, self.budget,
                         max_total_calls=self.max_total_calls,
-                        checkpoint_path=self.checkpoint_path)
+                        checkpoint_path=self.checkpoint_path,
+                        store=self.store, run_id=run_id, context=self.context,
+                        run_meta={"strategy": strategy.name, "seed": seed,
+                                  "budget": self.budget})
         if resume:
             run.resume()
         rng = np.random.default_rng(seed)
         strategy.reset(StrategyContext(
             space=run.space, budget=self.budget, rng=rng,
             replayed=tuple((o.idx, o.value) for o in run.journal)))
+        if self.warm_start and self.store is not None and len(self.store) > 0:
+            # transfer-aware warm start: prior records under this fingerprint
+            # (other runs) or a compatible cross-size one. Only an explicitly
+            # shared store transfers — a bare checkpoint journal keeps the
+            # historical semantics (its records are for resume only). Cold
+            # stores yield no matches and leave the run bit-for-bit identical.
+            warm = warm_matches(self.store, run.fingerprint, run.space,
+                                exclude_runs=(run_id,))
+            if warm:
+                strategy.warm_start(warm)
         self.worker_stats = {}
         t0 = time.time()
         pool = None
@@ -233,9 +262,10 @@ class ParallelTuningEngine:
             # the primary was accepted earlier, so it settled earlier
             entry.value, entry.resolved = entry.dup_of.value, True
         if entry.primary:
-            run._record(entry.key, entry.idx, entry.value, entry.proposal.af)
-            obs = run.journal[-1]
-            obs.worker, obs.dur = entry.worker, entry.dur
+            # worker/dur go in BEFORE _record serializes the observation to
+            # the store — patched-after fields would never reach disk
+            run._record(entry.key, entry.idx, entry.value, entry.proposal.af,
+                        worker=entry.worker, dur=entry.dur)
             in_flight.pop(entry.key, None)
             ws = self.worker_stats.setdefault(entry.worker, WorkerStats())
             ws.n_evals += 1

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,10 +61,13 @@ class GPState(NamedTuple):
 
 
 @partial(jax.jit, static_argnames=("kernel", "ell", "noise"))
-def gp_fit(X: jax.Array, y: jax.Array, mask: jax.Array, *,
+def gp_fit(X: jax.Array, y: jax.Array, mask: jax.Array,
+           extra: Optional[jax.Array] = None, *,
            kernel: str = "matern32", ell: float = 2.0,
            noise: float = 1e-6) -> GPState:
-    """Fit on padded observations. Padding rows become unit rows in K."""
+    """Fit on padded observations. Padding rows become unit rows in K.
+    ``extra`` (max_obs,) adds per-observation diagonal noise — the
+    warm-start transfer discount (None: exact legacy numerics)."""
     mf = mask.astype(jnp.float32)
     n = jnp.maximum(mf.sum(), 1.0)
     y_mean = jnp.sum(y * mf) / n
@@ -79,6 +82,8 @@ def gp_fit(X: jax.Array, y: jax.Array, mask: jax.Array, *,
     K = K * mm + (1.0 - mm) * eye * 0.0
     # padding rows/cols -> identity so the Cholesky stays PD
     K = K + eye * (noise + (1.0 - mf))
+    if extra is not None:
+        K = K + jnp.diag(extra * mf)
     chol = jnp.linalg.cholesky(K)
     alpha = jax.scipy.linalg.cho_solve((chol, True), yc)
     return GPState(X=X, y=y, mask=mask, chol=chol, alpha=alpha,
@@ -112,15 +117,20 @@ class GP:
         self.X = jnp.zeros((max_obs, dim), jnp.float32)
         self.y = jnp.zeros((max_obs,), jnp.float32)
         self.mask = jnp.zeros((max_obs,), bool)
+        self._extra: jax.Array | None = None   # per-obs noise (warm start)
         self.n = 0
         self.state: GPState | None = None
 
-    def add(self, x, y_val: float):
+    def add(self, x, y_val: float, extra_noise: float = 0.0):
         if self.n >= self.max_obs:
             return  # budget guard; caller controls budgets
         self.X = self.X.at[self.n].set(jnp.asarray(x, jnp.float32))
         self.y = self.y.at[self.n].set(float(y_val))
         self.mask = self.mask.at[self.n].set(True)
+        if extra_noise and self._extra is None:
+            self._extra = jnp.zeros((self.max_obs,), jnp.float32)
+        if self._extra is not None:    # always write: slot may be reused
+            self._extra = self._extra.at[self.n].set(float(extra_noise))
         self.n += 1
         self.state = None
 
@@ -142,8 +152,9 @@ class GP:
         self.state = None
 
     def fit(self) -> GPState:
-        self.state = gp_fit(self.X, self.y, self.mask, kernel=self.kernel,
-                            ell=self.ell, noise=self.noise)
+        self.state = gp_fit(self.X, self.y, self.mask, self._extra,
+                            kernel=self.kernel, ell=self.ell,
+                            noise=self.noise)
         return self.state
 
     def predict(self, Xc) -> Tuple[jax.Array, jax.Array]:

@@ -110,7 +110,10 @@ class IncrementalGP:
         self._mark = None
 
     # -- incremental update --------------------------------------------------
-    def add(self, x, y_val: float):
+    def add(self, x, y_val: float, extra_noise: float = 0.0):
+        """Add one observation. ``extra_noise`` inflates THIS observation's
+        diagonal term only — the transfer discount for warm-start records
+        mapped in from another search space (repro.store.transfer)."""
         if self.t >= self.max_obs:
             return
         x = np.asarray(x, np.float64)
@@ -123,7 +126,7 @@ class IncrementalGP:
             l = forward_substitute(self.L[:t, :t], k_obs)
         else:
             l = np.zeros(0)
-        d2 = 1.0 + self.noise - float(l @ l)
+        d2 = 1.0 + self.noise + float(extra_noise) - float(l @ l)
         d = math.sqrt(max(d2, 1e-12))
         self.L[t, :t] = l
         self.L[t, t] = d

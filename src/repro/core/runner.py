@@ -6,17 +6,20 @@ and don't consume budget (Kernel Tuner reports averages per configuration, so
 "there is little practical need to revisit"). Invalid evaluations DO consume
 budget — they cost real compile/run time on hardware.
 
-Fault tolerance: the run journal (every observation, in order) is serialized
-after each evaluation when a checkpoint path is given; `resume` replays the
-journal through the cache so a killed tuning run continues losslessly —
-the same property the paper's simulation mode exploits, required here for
-cluster-scale objectives (a dry-run compile job can take minutes).
+Fault tolerance: every observation streams, in acceptance order, into a
+``repro.store`` record stream when a checkpoint path (single-file store) or
+a shared ``TuningRecordStore`` is given; ``resume`` replays the run's
+records through the cache so a killed tuning run continues losslessly — the
+same property the paper's simulation mode exploits, required here for
+cluster-scale objectives (a dry-run compile job can take minutes). Journals
+written in the pre-store whole-JSON format are migrated in place on resume
+(``repro.store.migrate``); resume rejects records whose fingerprint does not
+match the current problem.
 """
 from __future__ import annotations
 
 import json
 import math
-import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
@@ -24,6 +27,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.objectives import Objective
+from repro.store.migrate import is_legacy_checkpoint, migrate_checkpoint
+from repro.store.records import (SpaceFingerprint, TuningRecord,
+                                 TuningRecordStore)
 
 
 class BudgetExhausted(Exception):
@@ -47,12 +53,20 @@ class Observation:
 class TuningRun:
     def __init__(self, objective: Objective, budget: int,
                  max_total_calls: Optional[int] = None,
-                 checkpoint_path: Optional[str] = None):
+                 checkpoint_path: Optional[str] = None,
+                 store: Optional[TuningRecordStore] = None,
+                 run_id: Optional[str] = None, context: str = "",
+                 run_meta: Optional[Dict[str, Any]] = None):
         self.objective = objective
         self.space = objective.space
         self.budget = budget
         self.max_total_calls = max_total_calls or budget * 50
         self.checkpoint_path = checkpoint_path
+        self.store = store          # opened lazily when only a path is given
+        self.run_id = run_id or "journal"
+        self.run_meta = run_meta or {}
+        self.fingerprint = SpaceFingerprint.of(
+            self.space, objective=objective.name, context=context)
         self.cache: Dict[str, float] = {}
         self.journal: List[Observation] = []
         self.evaluated_idx: Dict[int, float] = {}
@@ -65,14 +79,17 @@ class TuningRun:
         return len(self.cache)
 
     def _record(self, key: str, idx: Optional[int], value: float,
-                af: Optional[str]):
+                af: Optional[str], worker: str = "main", dur: float = 0.0):
         self.cache[key] = value
         if idx is not None:
             self.evaluated_idx[idx] = value
-        self.journal.append(Observation(idx, key, value, af,
-                                        time.time() - self.t0))
-        if self.checkpoint_path:
-            self._checkpoint()
+        obs = Observation(idx, key, value, af, time.time() - self.t0,
+                          worker=worker, dur=dur)
+        self.journal.append(obs)
+        store = self._open_store()
+        if store is not None:
+            store.append(self._to_record(obs, len(self.journal) - 1),
+                         fingerprint=self.fingerprint)
 
     def evaluate(self, idx: int, af: Optional[str] = None) -> float:
         key = str(int(idx))
@@ -121,28 +138,62 @@ class TuningRun:
             out[i] = cur
         return out
 
-    # -- fault tolerance ----------------------------------------------------
-    def _checkpoint(self):
-        tmp = self.checkpoint_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump({"objective": self.objective.name,
-                       "budget": self.budget,
-                       "journal": [[o.idx, o.key, o.value, o.af] for o in self.journal]},
-                      f)
-        os.replace(tmp, self.checkpoint_path)
+    # -- fault tolerance (store-backed journal) -----------------------------
+    def _open_store(self) -> Optional[TuningRecordStore]:
+        if self.store is None and self.checkpoint_path:
+            self.store = TuningRecordStore(self.checkpoint_path)
+        return self.store
+
+    def _config_of(self, idx: Optional[int], key: str) -> Optional[Dict]:
+        if idx is not None:
+            return self.space.config(int(idx))
+        if key.startswith("cfg:"):
+            return json.loads(key[4:])
+        return None
+
+    def _to_record(self, o: Observation, seq: int) -> TuningRecord:
+        return TuningRecord(
+            fp=self.fingerprint.digest, run=self.run_id, seq=seq, key=o.key,
+            idx=o.idx, value=o.value, af=o.af,
+            config=self._config_of(o.idx, o.key), worker=o.worker, dur=o.dur,
+            t=o.t, meta=self.run_meta)
 
     def resume(self) -> int:
-        """Replay a journal written by a previous (killed) run. Returns #replayed."""
-        if not self.checkpoint_path or not os.path.exists(self.checkpoint_path):
+        """Replay this run's record stream from the store (migrating a
+        pre-store whole-JSON checkpoint in place first). Returns #replayed.
+        Records under a different fingerprint are rejected: resuming a journal
+        against the wrong space/objective corrupted runs silently before."""
+        if self.checkpoint_path and is_legacy_checkpoint(self.checkpoint_path):
+            migrate_checkpoint(self.checkpoint_path, self.fingerprint,
+                               self.space, run_id=self.run_id)
+        store = self._open_store()
+        if store is None:
             return 0
-        with open(self.checkpoint_path) as f:
-            data = json.load(f)
-        for idx, key, value, af in data["journal"]:
-            self.cache[key] = value
-            if idx is not None:
-                self.evaluated_idx[idx] = value
-            self.journal.append(Observation(idx, key, value, af))
-        return len(data["journal"])
+        recs = store.records(run=self.run_id)
+        if store.single_file:
+            # a journal file IS one run: any foreign fingerprint in it means
+            # the space/objective changed under the checkpoint path
+            bad = [r for r in recs if r.fp != self.fingerprint.digest]
+            if bad:
+                raise ValueError(
+                    f"run {self.run_id!r}: {len(bad)} stored records carry "
+                    f"fingerprint {bad[0].fp}, current problem is "
+                    f"{self.fingerprint.digest} ({self.fingerprint.objective})"
+                    " — refusing to resume across space/objective changes")
+        else:
+            # shared store: the same run tag legitimately recurs under other
+            # fingerprints (same strategy/seed on another kernel)
+            recs = [r for r in recs if r.fp == self.fingerprint.digest]
+        # a twice-resumed run spans segments whose filename order need not
+        # follow write order (new pid sorts before old) — seq is the truth
+        recs.sort(key=lambda r: r.seq)
+        for r in recs:
+            self.cache[r.key] = r.value
+            if r.idx is not None:
+                self.evaluated_idx[r.idx] = r.value
+            self.journal.append(Observation(r.idx, r.key, r.value, r.af,
+                                            worker=r.worker, dur=r.dur))
+        return len(recs)
 
 
 @dataclass
@@ -162,16 +213,21 @@ def run_strategy(strategy, objective: Objective, budget: int,
                  seed: int = 0, checkpoint_path: Optional[str] = None,
                  resume: bool = False, batch_size: int = 1, workers: int = 1,
                  max_in_flight: Optional[int] = None,
-                 backend: str = "thread") -> TuneResult:
+                 backend: str = "thread",
+                 store=None, run_id: Optional[str] = None,
+                 warm_start: bool = True) -> TuneResult:
     """Thin wrapper over the ask/tell engine (repro.core.engine).
 
     The defaults (``batch_size=1, workers=1``) evaluate inline in this thread
     and reproduce the historical sequential runner bit-for-bit; raise
     ``workers``/``batch_size`` to parallelize the expensive compile-and-run
-    step."""
+    step. ``store`` (a TuningRecordStore or path) persists the journal and
+    warm-starts the strategy from matching prior records."""
     from repro.core.engine import ParallelTuningEngine
     engine = ParallelTuningEngine(objective, budget, batch_size=batch_size,
                                   workers=workers, max_in_flight=max_in_flight,
                                   backend=backend,
-                                  checkpoint_path=checkpoint_path)
+                                  checkpoint_path=checkpoint_path,
+                                  store=store, run_id=run_id,
+                                  warm_start=warm_start)
     return engine.run(strategy, seed=seed, resume=resume)

@@ -41,6 +41,14 @@ ENUM_CHUNK = 1 << 17
 #: neighbor query; larger spaces answer each query vectorized on demand.
 CSR_BUILD_MAX = 1 << 18
 
+#: Kept-config count at which X_norm switches from an eagerly materialized
+#: float32 (N, d) matrix to a chunk-computed row provider (LazyNorm).
+X_NORM_LAZY_MIN = 10_000_000
+
+#: On-demand neighbor rows memoized over the visited region (partial CSR) on
+#: spaces too large for the precomputed index. FIFO-evicted above this count.
+NEIGHBOR_CACHE_MAX = 1 << 16
+
 
 @dataclass(frozen=True)
 class Param:
@@ -84,6 +92,36 @@ class VectorConstraint:
         return bool(self.fn(cfg))
 
 
+class LazyNorm:
+    """Chunk-computed view of the normalized coordinate matrix.
+
+    Above ``x_norm_lazy_min`` kept configs the full float32 (N, d) matrix is
+    never materialized; rows are decoded from ``value_indices`` on demand.
+    Supports exactly the access patterns the tuning stack uses — integer,
+    slice and fancy indexing — each returning a fresh dense array for the
+    requested rows only.
+    """
+
+    __slots__ = ("_vi", "_denom", "_single", "shape")
+    dtype = np.dtype(np.float32)
+
+    def __init__(self, value_indices: np.ndarray, denom: np.ndarray,
+                 single: np.ndarray):
+        self._vi = value_indices
+        self._denom = denom          # (d,) float32: max(n_j - 1, 1)
+        self._single = single        # (d,) bool: single-valued params -> 0.5
+        self.shape = value_indices.shape
+
+    def __len__(self) -> int:
+        return self.shape[0]
+
+    def __getitem__(self, key) -> np.ndarray:
+        X = self._vi[key].astype(np.float32) / self._denom
+        if self._single.any():
+            X[..., self._single] = 0.5
+        return X
+
+
 class SearchSpace:
     """Enumerated constrained space with ordinal-normalized coordinates."""
 
@@ -92,12 +130,16 @@ class SearchSpace:
                  name: str = "space",
                  max_enumeration: int = DEFAULT_MAX_ENUMERATION,
                  chunk_size: int = ENUM_CHUNK,
-                 csr_build_max: int = CSR_BUILD_MAX):
+                 csr_build_max: int = CSR_BUILD_MAX,
+                 x_norm_lazy_min: int = X_NORM_LAZY_MIN,
+                 neighbor_cache_max: int = NEIGHBOR_CACHE_MAX):
         self.name = name
         self.params: Tuple[Param, ...] = tuple(params)
         self.constraints = tuple(constraints)
         self.dim = len(self.params)
         self._csr_build_max = csr_build_max
+        self._x_norm_lazy_min = x_norm_lazy_min
+        self._nbr_cache_max = neighbor_cache_max
 
         nvals = np.array([len(p.values) for p in self.params], np.int64)
         cart = math.prod(int(n) for n in nvals)
@@ -123,10 +165,15 @@ class SearchSpace:
         if self.size == 0:
             raise ValueError(f"{name}: all configurations violate constraints")
 
-        self.X_norm = self._normalize(idx)
+        self._norm_denom = np.array(
+            [max(len(p.values) - 1, 1) for p in self.params], np.float32)
+        self._norm_single = np.array(
+            [len(p.values) == 1 for p in self.params], bool)
+        self._set_x_norm()
         self._h_csr: Optional[Tuple[np.ndarray, np.ndarray]] = None
         self._a_csr: Optional[Tuple[np.ndarray, np.ndarray]] = None
         self._row_sq: Optional[np.ndarray] = None   # lazy ||X_norm||² cache
+        self._nbr_cache: Dict[Tuple[str, int], np.ndarray] = {}
 
     # -- enumeration ---------------------------------------------------------
     def _enumerate(self, chunk_size: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -162,15 +209,18 @@ class SearchSpace:
             return (np.zeros((0, d), np.int32), np.zeros(0, np.int64))
         return np.vstack(kept_idx), np.concatenate(kept_codes)
 
-    def _normalize(self, idx: np.ndarray) -> np.ndarray:
-        """Ordinal normalization: value j of n -> j/(n-1)  (n==1 -> 0.5)."""
-        denom = np.array([max(len(p.values) - 1, 1) for p in self.params],
-                         dtype=np.float32)
-        X = idx.astype(np.float32) / denom
-        for j, p in enumerate(self.params):
-            if len(p.values) == 1:
-                X[:, j] = 0.5
-        return X
+    def _set_x_norm(self) -> None:
+        """Ordinal normalization: value j of n -> j/(n-1)  (n==1 -> 0.5).
+        Above ``x_norm_lazy_min`` kept configs rows are chunk-computed on
+        demand instead of materializing the full float32 (N, d) matrix."""
+        lazy = LazyNorm(self.value_indices, self._norm_denom,
+                        self._norm_single)
+        self.X_norm = (lazy if self.size >= self._x_norm_lazy_min
+                       else lazy[:])
+
+    @property
+    def x_norm_lazy(self) -> bool:
+        return isinstance(self.X_norm, LazyNorm)
 
     def take(self, keep: np.ndarray) -> "SearchSpace":
         """Restrict the space to a sorted subset of its config indices
@@ -182,10 +232,11 @@ class SearchSpace:
             raise ValueError("take() needs a sorted, duplicate-free subset: "
                              "code lookups binary-search an ascending array")
         self.value_indices = self.value_indices[keep]
-        self.X_norm = self.X_norm[keep]
         self._codes = self._codes[keep]
         self.size = len(self.value_indices)
+        self._set_x_norm()
         self._h_csr = self._a_csr = self._row_sq = None
+        self._nbr_cache = {}
         return self
 
     # -- config access ------------------------------------------------------
@@ -274,11 +325,21 @@ class SearchSpace:
         if csr is not None:
             indptr, indices = csr
             return indices[indptr[i]:indptr[i + 1]].tolist()
-        # space too large for a precomputed index: one row, still vectorized
-        row = self.value_indices[i:i + 1].astype(np.int64)
-        cand, valid = candidates_fn(row, self._codes[i:i + 1])
-        found, pos = self._resolve_candidates(cand, valid)
-        return pos[found].tolist()
+        # space too large for a precomputed index: partial CSR over the
+        # visited region — local searches (SA/MLS/GA) re-query the incumbent
+        # neighborhood every step, so memoized rows turn the ~90 µs vectorized
+        # recompute into a dict hit. FIFO-evicted above _nbr_cache_max rows.
+        key = (csr_attr, int(i))
+        hit = self._nbr_cache.get(key)
+        if hit is None:
+            row = self.value_indices[i:i + 1].astype(np.int64)
+            cand, valid = candidates_fn(row, self._codes[i:i + 1])
+            found, pos = self._resolve_candidates(cand, valid)
+            hit = pos[found].astype(np.int32)
+            if len(self._nbr_cache) >= self._nbr_cache_max:
+                self._nbr_cache.pop(next(iter(self._nbr_cache)))
+            self._nbr_cache[key] = hit
+        return hit.tolist()
 
     def hamming_neighbors(self, i: int) -> List[int]:
         return self._neighbors(i, self._hamming_candidates, "_h_csr")
@@ -291,32 +352,48 @@ class SearchSpace:
         return int(rng.integers(0, self.size))
 
     def nearest_index(self, x_norm: np.ndarray,
-                      exclude: Optional[set] = None) -> int:
+                      exclude: Optional[set] = None,
+                      chunk: int = 1 << 16) -> int:
         """Snap a [0,1]^d point to the nearest enumerated config (L2)."""
         x = np.asarray(x_norm)
         if x.dtype != self.X_norm.dtype:
             # don't let a float64 query upcast the whole (N, d) matrix
             x = x.astype(self.X_norm.dtype)
-        d2 = np.sum((self.X_norm - x[None, :]) ** 2, axis=1)
-        if exclude:
-            d2[list(exclude)] = np.inf   # d2 is a fresh buffer: no copy needed
-        return int(np.argmin(d2))
+        if not self.x_norm_lazy:
+            d2 = np.sum((self.X_norm - x[None, :]) ** 2, axis=1)
+            if exclude:
+                d2[list(exclude)] = np.inf   # fresh buffer: no copy needed
+            return int(np.argmin(d2))
+        # lazy X_norm: chunk the scan so no (N, d) buffer materializes
+        best_d, best_i = np.inf, 0
+        for lo in range(0, self.size, chunk):
+            d2 = np.sum((self.X_norm[lo:lo + chunk] - x[None, :]) ** 2, axis=1)
+            if exclude:
+                local = [e - lo for e in exclude if lo <= e < lo + len(d2)]
+                if local:
+                    d2[local] = np.inf
+            k = int(np.argmin(d2))
+            if d2[k] < best_d:
+                best_d, best_i = float(d2[k]), lo + k
+        return best_i
 
     def nearest_indices(self, X: np.ndarray, chunk: int = 1 << 16) -> np.ndarray:
         """Batch nearest_index (no exclusion), chunked over the space so the
         (q, N) distance matrix never materializes. Used by candidate-pool BO's
-        LHS refresh."""
+        LHS refresh and by cross-size warm-start record mapping."""
         X = np.asarray(X, self.X_norm.dtype)
         if X.ndim == 1:
             X = X[None, :]
         q_sq = np.sum(X * X, axis=1)
-        if self._row_sq is None:
+        if self._row_sq is None and not self.x_norm_lazy:
             self._row_sq = np.sum(self.X_norm * self.X_norm, axis=1)
         best_d = np.full(len(X), np.inf, np.float32)
         best_i = np.zeros(len(X), np.int64)
         for lo in range(0, self.size, chunk):
             B = self.X_norm[lo:lo + chunk]
-            d2 = (q_sq[:, None] + self._row_sq[None, lo:lo + chunk]
+            b_sq = (np.sum(B * B, axis=1) if self._row_sq is None
+                    else self._row_sq[lo:lo + chunk])
+            d2 = (q_sq[:, None] + b_sq[None, :]
                   - 2.0 * (X @ B.T))                       # (q, m)
             k = np.argmin(d2, axis=1)                      # row-contiguous
             d = d2[np.arange(len(X)), k]

@@ -63,6 +63,22 @@ class StrategyContext:
     replayed: Sequence = field(default_factory=tuple)
 
 
+@dataclass(frozen=True)
+class WarmObservation:
+    """One prior observation mapped into the current space (store layer).
+
+    Exact-fingerprint records carry their original config index; cross-size
+    records were nearest-neighbor matched into this space and carry the extra
+    GP ``noise`` discounting the mapping (repro.store.transfer).
+    """
+    x: np.ndarray                # normalized position in the current space
+    value: float                 # finite prior observation
+    idx: Optional[int]           # matched config index in the current space
+    exact: bool                  # same fingerprint: no mapping, no discount
+    noise: float = 0.0           # extra GP noise (transfer discount)
+    config: Optional[Dict[str, Any]] = None
+
+
 class Strategy:
     """Ask/tell strategy ABC. Stateful; ``reset`` starts a fresh run."""
 
@@ -81,6 +97,14 @@ class Strategy:
         """One tell per accepted proposal, in acceptance order. ``value`` is
         NaN for invalid configurations (they still consumed budget)."""
         raise NotImplementedError
+
+    def warm_start(self, warm: Sequence[WarmObservation]) -> None:
+        """Transfer-aware warm start: prior observations matched from the
+        tuning-record store, mapped into the current space. Called at most
+        once per run, after ``reset`` and before the first ``suggest`` —
+        and only when matches exist, so cold-store runs never enter here
+        (bit-for-bit identical to no-store runs). Default: ignore priors."""
+        return None
 
 
 class GeneratorStrategy(Strategy):

@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
         --batch 4 --prompt-len 32 --decode-steps 16
+
+Distribution/performance knobs come from the tuning-record store when one is
+given (``--store``): the best prior tuning result for this (arch, shape,
+mesh) cell overrides the built-in defaults, so serving inherits every past
+tuning run's work. No record -> defaults, loudly.
 """
 from __future__ import annotations
 
@@ -15,6 +20,21 @@ from repro.configs.registry import get_arch, smoke_config
 from repro.models.params import init_params
 from repro.models.stepfn import make_decode_step, make_prefill_step
 from repro.parallel.sharding import ParallelConfig, ShardCtx
+from repro.store import apply_sharding_config, best_sharding_config
+
+
+def resolve_pcfg(pcfg: ParallelConfig, store: str, arch: str, shape: str,
+                 mesh: str = "single") -> ParallelConfig:
+    """Best stored tuning config for this serving cell, else defaults."""
+    hit = best_sharding_config(store, arch, shape, mesh=mesh)
+    if hit is None:
+        print(f"[serve] no tuning record for ({arch}, {shape}, {mesh}) in "
+              f"{store} — using built-in defaults")
+        return pcfg
+    cfg, step_time = hit
+    print(f"[serve] tuned config from store ({step_time:.3f}s roofline): "
+          f"{cfg}")
+    return apply_sharding_config(pcfg, cfg)
 
 
 def main() -> None:
@@ -25,10 +45,18 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--store", default=None,
+                    help="tuning-record store (dir or .jsonl) to resolve "
+                         "the serving config from")
+    ap.add_argument("--tuned-shape", default="decode_32k",
+                    help="dry-run shape whose tuning records configure "
+                         "this server")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
     pcfg = ParallelConfig(flash_threshold=1 << 30, logits_chunk=0)
+    if args.store:
+        pcfg = resolve_pcfg(pcfg, args.store, args.arch, args.tuned_shape)
     px = ShardCtx(mesh=None, pcfg=pcfg)
     key = jax.random.PRNGKey(args.seed)
     params = init_params(cfg, key)

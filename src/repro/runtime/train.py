@@ -46,7 +46,7 @@ class LoopConfig:
     straggler_factor: float = 3.0
     ewma_alpha: float = 0.2
     fail_at_step: Optional[int] = None     # failure injection (tests/demo)
-    peak_lr: float = 3e-4
+    peak_lr: float = 3e-3
     warmup: int = 100
 
 
@@ -69,8 +69,14 @@ class TrainLoop:
         self.pcfg = pcfg or ParallelConfig(flash_threshold=1 << 30, logits_chunk=0)
         self.mesh = mesh
         self.px = ShardCtx(mesh=mesh, pcfg=self.pcfg)
+        # a warmup longer than the whole run would cap LR at a fraction of
+        # peak (sub-bf16-resolution updates on short smoke runs: nothing
+        # learns). Only the degenerate case is clamped — an explicit warmup
+        # that fits inside the run is honored as configured.
+        warmup = (max(loop_cfg.steps // 10, 1)
+                  if loop_cfg.warmup >= loop_cfg.steps else loop_cfg.warmup)
         self.optimizer = AdamW(
-            schedule=warmup_cosine(loop_cfg.peak_lr, loop_cfg.warmup,
+            schedule=warmup_cosine(loop_cfg.peak_lr, warmup,
                                    max(loop_cfg.steps, 1)),
             weight_decay=0.01)
         self.metrics = LoopMetrics()
@@ -169,6 +175,11 @@ def run_with_restarts(make_loop: Callable[[int], TrainLoop],
         try:
             return loop.run()
         except SimulatedFailure as e:
+            # drain in-flight async checkpoint writes before the next attempt
+            # scans ckpt_dir: an unfinished .tmp write is invisible to
+            # latest(), so restarting immediately would lose the newest step
+            if loop._ckpt is not None:
+                loop._ckpt.wait()
             attempt += 1
             if attempt > max_restarts:
                 raise

@@ -1,0 +1,18 @@
+"""Persistent tuning-record store + transfer-aware warm starts (DESIGN.md §11).
+
+The observation/results subsystem: every layer produces into and consumes
+from one append-only record store keyed by search-space fingerprints —
+engine journals (checkpoint/resume), benchmark matrices, golden traces,
+dry-run compile tunings, and the serve-time best-config lookup.
+"""
+from repro.store.records import (SpaceFingerprint, TuningRecord,
+                                 TuningRecordStore)
+from repro.store.transfer import warm_matches
+from repro.store.migrate import (ingest_golden, is_legacy_checkpoint,
+                                 migrate_checkpoint)
+from repro.store.resolve import apply_sharding_config, best_sharding_config
+
+__all__ = ["SpaceFingerprint", "TuningRecord", "TuningRecordStore",
+           "warm_matches", "ingest_golden", "is_legacy_checkpoint",
+           "migrate_checkpoint", "apply_sharding_config",
+           "best_sharding_config"]

@@ -1,0 +1,333 @@
+"""Persistent tuning-record store (DESIGN.md §11).
+
+One schema for every observation the system produces — engine journals,
+benchmark runs, golden traces, dry-run compile tunings. Records are
+append-only JSONL, keyed by a ``SpaceFingerprint``: the identity of a tuning
+problem (parameter grid, restriction signature, objective id, device
+context). The store is the substrate for checkpoint/resume (a run's journal
+is the ordered record stream of its ``run`` id) and for transfer-aware
+warm starts (``repro.store.transfer`` matches prior records — exact
+fingerprint or compatible-dims cross-size — into a new run).
+
+Layout:
+  * directory mode — ``<path>/segment-*.jsonl``, one segment per writer;
+    shared store across runs/benchmarks;
+  * single-file mode — ``<path>`` ends in ``.json``/``.jsonl``: the whole
+    store is one segment. This is what a per-run checkpoint path becomes
+    (the legacy whole-journal-rewrite JSON format is migrated in place by
+    ``repro.store.migrate``).
+
+Each line is either a fingerprint descriptor (``kind: fp`` — written once
+per digest per segment, making segments self-contained) or an observation
+(``kind: obs``). Appends are flushed per record, so a killed run leaves a
+valid record-stream prefix; a torn final line is tolerated on load.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+import os
+from dataclasses import dataclass, field
+from functools import cached_property
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.searchspace import SearchSpace
+
+SCHEMA_VERSION = 1
+
+
+@dataclass(frozen=True)
+class SpaceFingerprint:
+    """Identity of a tuning problem: dims + restrictions + objective + device.
+
+    ``params`` stores each parameter's ordered value grid as strings, so a
+    fingerprint is JSON-stable and can renormalize configs from *its own*
+    grid without reconstructing a SearchSpace — which is what makes
+    cross-size transfer possible from records alone.
+    """
+
+    params: Tuple[Tuple[str, Tuple[str, ...]], ...]
+    size: int                    # kept configs (captures the filter effect)
+    cartesian: int
+    restrictions: Tuple[str, ...]
+    objective: str               # objective id, e.g. "expdist@a100"
+    context: str = ""            # device/deployment context
+
+    @cached_property
+    def digest(self) -> str:
+        blob = json.dumps([list(map(list, self.params)), self.size,
+                           self.cartesian, list(self.restrictions),
+                           self.objective, self.context])
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+    @classmethod
+    def of(cls, space: SearchSpace, objective: str = "",
+           context: str = "") -> "SpaceFingerprint":
+        return cls(
+            params=tuple((p.name, tuple(str(v) for v in p.values))
+                         for p in space.params),
+            size=int(space.size), cartesian=int(space.cartesian_size),
+            restrictions=tuple(
+                getattr(c, "name", getattr(c, "__name__", "<restriction>"))
+                for c in space.constraints),
+            objective=str(objective), context=str(context))
+
+    def compatible(self, other: "SpaceFingerprint") -> bool:
+        """Cross-size transferable: same parameter names in the same order
+        (the value grids — and so the space sizes — may differ)."""
+        return (self.param_names == other.param_names
+                and len(self.params) > 0)
+
+    @property
+    def param_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.params)
+
+    def x_norm(self, config: Dict[str, Any]) -> Optional[np.ndarray]:
+        """Ordinal-normalized position of ``config`` under THIS fingerprint's
+        grids (value j of n -> j/(n-1), n==1 -> 0.5); None when a value is
+        not on the grid."""
+        out = np.empty(len(self.params), np.float32)
+        for j, (name, values) in enumerate(self.params):
+            if name not in config:
+                return None
+            try:
+                k = values.index(str(config[name]))
+            except ValueError:
+                return None
+            out[j] = 0.5 if len(values) == 1 else k / (len(values) - 1)
+        return out
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"kind": "fp", "v": SCHEMA_VERSION, "digest": self.digest,
+                "params": [[n, list(vs)] for n, vs in self.params],
+                "size": self.size, "cartesian": self.cartesian,
+                "restrictions": list(self.restrictions),
+                "objective": self.objective, "context": self.context}
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "SpaceFingerprint":
+        return cls(params=tuple((n, tuple(vs)) for n, vs in d["params"]),
+                   size=int(d["size"]), cartesian=int(d["cartesian"]),
+                   restrictions=tuple(d["restrictions"]),
+                   objective=d["objective"], context=d.get("context", ""))
+
+
+@dataclass
+class TuningRecord:
+    """One observation: what was evaluated, under which problem identity."""
+
+    fp: str                      # SpaceFingerprint digest
+    run: str                     # journal stream id (strategy/seed/run tag)
+    seq: int                     # acceptance-order position within the run
+    key: str                     # unique evaluation key (space idx or cfg:)
+    idx: Optional[int]           # config index (None outside the space)
+    value: float                 # objective value, NaN = invalid
+    af: Optional[str] = None
+    config: Optional[Dict[str, Any]] = None
+    worker: str = "main"
+    dur: float = 0.0
+    t: float = 0.0
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "kind": "obs", "fp": self.fp, "run": self.run, "seq": self.seq,
+            "key": self.key, "idx": self.idx,
+            "value": None if not math.isfinite(self.value) else self.value,
+            "af": self.af}
+        if self.config is not None:
+            d["config"] = self.config
+        if self.worker != "main":
+            d["worker"] = self.worker
+        if self.dur:
+            d["dur"] = self.dur
+        if self.t:
+            d["t"] = self.t
+        if self.meta:
+            d["meta"] = self.meta
+        return d
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "TuningRecord":
+        v = d.get("value")
+        return cls(fp=d["fp"], run=d["run"], seq=int(d.get("seq", 0)),
+                   key=d["key"],
+                   idx=None if d.get("idx") is None else int(d["idx"]),
+                   value=math.nan if v is None else float(v),
+                   af=d.get("af"), config=d.get("config"),
+                   worker=d.get("worker", "main"),
+                   dur=float(d.get("dur", 0.0)), t=float(d.get("t", 0.0)),
+                   meta=d.get("meta", {}))
+
+
+def _is_single_file(path: str) -> bool:
+    return path.endswith((".json", ".jsonl"))
+
+
+class TuningRecordStore:
+    """Append-only JSONL segments + in-memory index by fingerprint digest."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.single_file = _is_single_file(path)
+        self._records: List[TuningRecord] = []
+        self._by_fp: Dict[str, List[int]] = {}
+        self._fps: Dict[str, SpaceFingerprint] = {}
+        self._fh = None                    # lazy append handle
+        self._written_fps: set = set()     # descriptors this handle has written
+        self._load()
+
+    # -- loading ------------------------------------------------------------
+    def _segments(self) -> List[str]:
+        if self.single_file:
+            return [self.path] if os.path.exists(self.path) else []
+        if not os.path.isdir(self.path):
+            return []
+        return sorted(os.path.join(self.path, f)
+                      for f in os.listdir(self.path)
+                      if f.endswith(".jsonl"))
+
+    def _load(self) -> None:
+        for seg in self._segments():
+            with open(seg) as f:
+                lines = f.read().splitlines()
+            for k, line in enumerate(lines):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    d = json.loads(line)
+                except json.JSONDecodeError:
+                    if k == len(lines) - 1:
+                        break   # torn final line from a killed writer
+                    raise ValueError(
+                        f"{seg}:{k + 1}: corrupt record line — if this is a "
+                        "legacy engine checkpoint, migrate it with "
+                        "repro.store.migrate.migrate_checkpoint")
+                self._ingest(d, seg, k)
+
+    def _ingest(self, d: Dict[str, Any], seg: str, lineno: int) -> None:
+        kind = d.get("kind")
+        if kind == "fp":
+            fp = SpaceFingerprint.from_json(d)
+            self._fps.setdefault(fp.digest, fp)
+        elif kind == "obs":
+            rec = TuningRecord.from_json(d)
+            self._by_fp.setdefault(rec.fp, []).append(len(self._records))
+            self._records.append(rec)
+        else:
+            raise ValueError(
+                f"{seg}:{lineno + 1}: unknown record kind {kind!r} — if this "
+                "is a legacy engine checkpoint, migrate it with "
+                "repro.store.migrate.migrate_checkpoint")
+
+    # -- appending ----------------------------------------------------------
+    def _handle(self):
+        if self._fh is None:
+            if self.single_file:
+                parent = os.path.dirname(self.path)
+                if parent:
+                    os.makedirs(parent, exist_ok=True)
+                self._fh = open(self.path, "a")
+            else:
+                os.makedirs(self.path, exist_ok=True)
+                k = 0
+                while True:
+                    seg = os.path.join(self.path,
+                                       f"segment-{os.getpid()}-{k}.jsonl")
+                    if not os.path.exists(seg):
+                        break
+                    k += 1
+                self._fh = open(seg, "a")
+        return self._fh
+
+    def register(self, fp: SpaceFingerprint) -> str:
+        """Record a fingerprint descriptor (idempotent). Returns the digest."""
+        if fp.digest not in self._written_fps:
+            self._handle().write(json.dumps(fp.to_json()) + "\n")
+            self._handle().flush()
+            self._written_fps.add(fp.digest)
+        self._fps.setdefault(fp.digest, fp)
+        return fp.digest
+
+    def append(self, rec: TuningRecord,
+               fingerprint: Optional[SpaceFingerprint] = None) -> None:
+        """Append one observation; flushes so crashes leave a valid prefix."""
+        if fingerprint is not None:
+            if rec.fp and rec.fp != fingerprint.digest:
+                raise ValueError(f"record fp {rec.fp} != fingerprint "
+                                 f"{fingerprint.digest}")
+            rec.fp = fingerprint.digest
+            self.register(fingerprint)
+        if rec.fp not in self._fps:
+            raise ValueError(f"unknown fingerprint {rec.fp!r}: register the "
+                             "descriptor first (append(rec, fingerprint=...))")
+        if rec.fp not in self._written_fps:
+            self.register(self._fps[rec.fp])
+        fh = self._handle()
+        fh.write(json.dumps(rec.to_json()) + "\n")
+        fh.flush()
+        self._by_fp.setdefault(rec.fp, []).append(len(self._records))
+        self._records.append(rec)
+
+    def extend(self, recs: Iterable[TuningRecord],
+               fingerprint: Optional[SpaceFingerprint] = None) -> None:
+        for rec in recs:
+            self.append(rec, fingerprint=fingerprint)
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+            self._written_fps = set()
+
+    # -- queries ------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def fingerprints(self) -> Dict[str, SpaceFingerprint]:
+        return dict(self._fps)
+
+    def fingerprint_info(self, digest: str) -> Optional[SpaceFingerprint]:
+        return self._fps.get(digest)
+
+    def records(self, fp: Optional[str] = None,
+                run: Optional[str] = None) -> List[TuningRecord]:
+        """Records in append order, optionally filtered by digest and/or run."""
+        if fp is not None:
+            rows: Sequence[TuningRecord] = [self._records[i]
+                                            for i in self._by_fp.get(fp, ())]
+        else:
+            rows = self._records
+        if run is not None:
+            rows = [r for r in rows if r.run == run]
+        return list(rows)
+
+    def runs(self, fp: Optional[str] = None) -> List[str]:
+        seen: Dict[str, None] = {}
+        for r in (self.records(fp=fp) if fp is not None else self._records):
+            seen.setdefault(r.run, None)
+        return list(seen)
+
+    def best(self, fp: str) -> Optional[TuningRecord]:
+        """Best (lowest finite value) record for an exact fingerprint."""
+        best: Optional[TuningRecord] = None
+        for i in self._by_fp.get(fp, ()):
+            r = self._records[i]
+            if math.isfinite(r.value) and (best is None
+                                           or r.value < best.value):
+                best = r
+        return best
+
+    def best_config(self, fp) -> Optional[Tuple[Dict[str, Any], float]]:
+        """(config, value) of the best prior evaluation for this problem.
+        ``fp`` may be a SpaceFingerprint or a digest string. The serve/launch
+        layer calls this before falling back to built-in defaults."""
+        digest = fp.digest if isinstance(fp, SpaceFingerprint) else fp
+        rec = self.best(digest)
+        if rec is None or rec.config is None:
+            return None
+        return dict(rec.config), rec.value

@@ -1,0 +1,56 @@
+"""Serve/launch-side config resolution from the record store.
+
+The launchers ask the store for the best prior tuning result of their exact
+problem — ``(arch, shape, mesh)`` distribution tuning fingerprint — before
+falling back to built-in defaults, so a production deployment never re-pays
+tuning cost for a scenario any earlier run (tuner, benchmark, or another
+host writing to the same store) has already explored.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+from repro.store.records import SpaceFingerprint, TuningRecordStore
+
+#: sharding-space parameters that map 1:1 onto ParallelConfig fields
+_PCFG_FIELDS = ("remat", "attn_q_chunks", "logits_chunk", "attn_block_kv",
+                "microbatches", "capacity_factor", "opt_moment_dtype",
+                "mlstm_chunk")
+
+
+def best_sharding_config(store, arch: str, shape: str, mesh: str = "single",
+                         wide: bool = False
+                         ) -> Optional[Tuple[Dict[str, Any], float]]:
+    """(config, roofline step time) of the best prior tuning record for this
+    (arch, shape, mesh) cell, or None when the store has never seen it."""
+    if isinstance(store, str):
+        if not os.path.exists(store):
+            return None
+        store = TuningRecordStore(store)
+    from repro.core.tuning_targets import sharding_space
+    space = sharding_space(arch, shape, wide=wide)
+    fp = SpaceFingerprint.of(space,
+                             objective=f"dryrun[{arch}×{shape}×{mesh}]")
+    hit = store.best_config(fp)
+    if hit is not None:
+        return hit
+    # a narrow-space record also serves a wide lookup (and vice versa): any
+    # same-named sharding fingerprint for this cell beats the defaults
+    for digest, desc in store.fingerprints().items():
+        if desc.objective == fp.objective and digest != fp.digest:
+            alt = store.best_config(digest)
+            if alt is not None:
+                return alt
+    return None
+
+
+def apply_sharding_config(pcfg, cfg: Dict[str, Any]):
+    """Overlay a stored tuning config onto a ParallelConfig (dataclass
+    ``replace``): only the knobs ParallelConfig owns; mesh rules
+    (experts/embed) are applied by the launch layer, not here."""
+    kw = {k: cfg[k] for k in _PCFG_FIELDS if k in cfg}
+    if "flash" in cfg:
+        # flash=1: blockwise attention always on; flash=0: never
+        kw["flash_threshold"] = 0 if cfg["flash"] else 1 << 30
+    return pcfg.replace(**kw)

@@ -21,6 +21,7 @@ from repro.core.runner import run_strategy
 from repro.core.searchspace import Param, SearchSpace
 from repro.core.strategies import make_strategy
 from repro.core.strategies.base import Proposal, Strategy, StrategyContext
+from repro.store.records import TuningRecordStore
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "seed_traces.json")
 
@@ -196,7 +197,7 @@ def test_checkpoint_resume_mid_batch_with_workers(tmp_path, strat):
     with pytest.raises(RuntimeError):
         run_strategy(make_strategy(strat), DyingObjective(obj, 17), budget=40,
                      seed=0, checkpoint_path=ck, batch_size=4, workers=4)
-    recorded = json.load(open(ck))["journal"]
+    recorded = TuningRecordStore(ck).records()
     assert 0 < len(recorded) <= 17, "journal not an evaluation-prefix"
     res = run_strategy(make_strategy(strat), obj, budget=40, seed=0,
                        checkpoint_path=ck, resume=True, batch_size=4,
@@ -206,7 +207,7 @@ def test_checkpoint_resume_mid_batch_with_workers(tmp_path, strat):
     assert len(keys) == len(set(keys)), "resume re-evaluated a config"
     # the checkpointed prefix survived verbatim
     assert [o.key for o in res.journal[:len(recorded)]] \
-        == [r[1] for r in recorded]
+        == [r.key for r in recorded]
 
 
 def test_journal_order_deterministic_under_parallelism():

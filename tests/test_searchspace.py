@@ -218,3 +218,78 @@ def test_neighbors_match_dict_probe_reference(seed):
         assert on_demand.adjacent_neighbors(i) == want_a
         assert csr.index_of_value_indices(ref[i]) == i
         assert on_demand.index_of_value_indices(ref[i]) == i
+
+
+# ---------------------------------------------------------------------------
+# lazy X_norm (chunk-computed above x_norm_lazy_min) + neighbor frontier cache
+# ---------------------------------------------------------------------------
+def _twin_spaces():
+    params = [Param("a", tuple(range(9))), Param("b", tuple(range(7))),
+              Param("c", (5,)), Param("d", (1, 2, 3))]
+    cons = [VectorConstraint(lambda c: (c["a"] + c["b"]) % 3 != 0)]
+    lazy = SearchSpace(params, cons, name="lazy", x_norm_lazy_min=1)
+    eager = SearchSpace(params, cons, name="eager")
+    return lazy, eager
+
+
+def test_lazy_x_norm_matches_eager():
+    lazy, eager = _twin_spaces()
+    assert lazy.x_norm_lazy and not eager.x_norm_lazy
+    assert lazy.X_norm.shape == eager.X_norm.shape
+    np.testing.assert_array_equal(lazy.X_norm[:], eager.X_norm)
+    np.testing.assert_array_equal(lazy.X_norm[7], eager.X_norm[7])
+    ids = np.array([0, 5, 11, lazy.size - 1])
+    np.testing.assert_array_equal(lazy.X_norm[ids], eager.X_norm[ids])
+    np.testing.assert_array_equal(lazy.X_norm[3:17], eager.X_norm[3:17])
+
+
+def test_lazy_nearest_index_and_batch_match_eager():
+    lazy, eager = _twin_spaces()
+    rng = np.random.default_rng(0)
+    pts = rng.random((16, lazy.dim), dtype=np.float32)
+    for p in pts:
+        assert lazy.nearest_index(p) == eager.nearest_index(p)
+    excl = {int(eager.nearest_index(pts[0]))}
+    assert (lazy.nearest_index(pts[0], exclude=excl)
+            == eager.nearest_index(pts[0], exclude=excl))
+    np.testing.assert_array_equal(lazy.nearest_indices(pts),
+                                  eager.nearest_indices(pts))
+
+
+def test_lazy_x_norm_survives_take():
+    lazy, eager = _twin_spaces()
+    keep = np.arange(0, lazy.size, 2)
+    lazy.take(keep)
+    eager.take(keep)
+    assert lazy.x_norm_lazy
+    np.testing.assert_array_equal(lazy.X_norm[:], eager.X_norm)
+
+
+def test_on_demand_neighbor_frontier_is_cached():
+    params = [Param(f"p{j}", tuple(range(6))) for j in range(4)]
+    s = SearchSpace(params, name="big", csr_build_max=0)  # force on-demand
+    first = s.hamming_neighbors(100)
+    assert ("_h_csr", 100) in s._nbr_cache
+    calls = {"n": 0}
+    orig = s._resolve_candidates
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    s._resolve_candidates = counting
+    assert s.hamming_neighbors(100) == first      # memo hit: no recompute
+    assert calls["n"] == 0
+    s.hamming_neighbors(101)
+    assert calls["n"] == 1
+
+
+def test_neighbor_frontier_cache_evicts_fifo():
+    params = [Param(f"p{j}", tuple(range(5))) for j in range(3)]
+    s = SearchSpace(params, name="tiny", csr_build_max=0,
+                    neighbor_cache_max=4)
+    for i in range(6):
+        s.hamming_neighbors(i)
+    assert len(s._nbr_cache) == 4
+    assert ("_h_csr", 0) not in s._nbr_cache      # oldest rows evicted
+    assert ("_h_csr", 5) in s._nbr_cache

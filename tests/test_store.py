@@ -1,0 +1,337 @@
+"""Tuning-record store: round-trip, fingerprints, migration, warm start.
+
+Acceptance pins (ISSUE 3):
+  * cold-store runs (store attached, no prior records for the problem) stay
+    bit-for-bit identical to tests/golden/seed_traces.json for all 9
+    strategies;
+  * store round-trip preserves records exactly; resume rejects journals whose
+    fingerprint doesn't match the current problem;
+  * legacy whole-JSON engine checkpoints migrate in place and resume;
+  * warm-started BO on an unseen cross-size scenario reaches the cold best
+    in >= 30% fewer unique evaluations.
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.objectives import SimulatedObjective
+from repro.core.runner import TuningRun, run_strategy
+from repro.core.searchspace import Param, SearchSpace
+from repro.core.spaces import make_scenario_objective
+from repro.core.strategies import make_strategy
+from repro.store import (SpaceFingerprint, TuningRecord, TuningRecordStore,
+                         apply_sharding_config, best_sharding_config,
+                         ingest_golden, is_legacy_checkpoint,
+                         migrate_checkpoint, warm_matches)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "seed_traces.json")
+
+
+def _toy_objective(seed=0, n=400, invalid_frac=0.2, name="toy", shift=0.0,
+                   n_a=20):
+    """test_engine's toy surface, with optional shift/resize for transfer."""
+    rng = np.random.default_rng(seed)
+    space = SearchSpace([Param("a", tuple(range(n_a))),
+                         Param("b", tuple(range(20)))], name="toy")
+    x = space.X_norm
+    times = 1.0 + 5 * ((x[:, 0] - 0.3 - shift) ** 2 + (x[:, 1] - 0.7) ** 2) \
+        + 0.3 * np.sin(7 * x[:, 0]) * np.cos(5 * x[:, 1])
+    inv = rng.choice(space.size, int(invalid_frac * space.size), replace=False)
+    times = times.astype(np.float64)
+    times[inv] = math.nan
+    return SimulatedObjective(space, times, name=name)
+
+
+# ---------------------------------------------------------------------------
+# fingerprints
+# ---------------------------------------------------------------------------
+def test_fingerprint_identity_and_compatibility():
+    a = SpaceFingerprint.of(_toy_objective().space, objective="toy@sim")
+    b = SpaceFingerprint.of(_toy_objective().space, objective="toy@sim")
+    assert a.digest == b.digest
+    c = SpaceFingerprint.of(_toy_objective(n_a=18).space, objective="toy@sim")
+    assert c.digest != a.digest          # different grid -> different problem
+    assert a.compatible(c) and c.compatible(a)   # ...but same dims: transfers
+    d = SpaceFingerprint.of(
+        SearchSpace([Param("z", (1, 2))], name="other").take(np.array([0, 1])),
+        objective="toy@sim")
+    assert not a.compatible(d)
+
+
+def test_fingerprint_x_norm_matches_space():
+    obj = _toy_objective()
+    fp = SpaceFingerprint.of(obj.space, objective=obj.name)
+    for i in (0, 57, 399):
+        cfg = obj.space.config(i)
+        np.testing.assert_allclose(fp.x_norm(cfg), obj.space.X_norm[i],
+                                   atol=1e-7)
+    assert fp.x_norm({"a": 99, "b": 0}) is None     # off-grid value
+
+
+# ---------------------------------------------------------------------------
+# cold-store golden parity (all 9 strategies)
+# ---------------------------------------------------------------------------
+with open(GOLDEN) as f:
+    _GOLDEN = json.load(f)
+
+
+@pytest.mark.parametrize("case", sorted(_GOLDEN))
+def test_cold_store_reproduces_golden_traces(case, tmp_path):
+    """A store with no matching prior records must not perturb the run."""
+    strat, seed = case.rsplit(":", 1)
+    res = run_strategy(make_strategy(strat), _toy_objective(), budget=40,
+                       seed=int(seed), store=str(tmp_path / "store"))
+    got = [[o.key, None if not math.isfinite(o.value) else o.value, o.af]
+           for o in res.journal]
+    assert got == _GOLDEN[case]["journal"], f"{case}: journal diverged"
+    # and the journal round-trips through the store losslessly
+    store = TuningRecordStore(str(tmp_path / "store"))
+    recs = store.records(run=f"{res.strategy}-s{seed}")
+    assert [r.key for r in recs] == [o.key for o in res.journal]
+
+
+# ---------------------------------------------------------------------------
+# round-trip (hypothesis) + fingerprint-mismatch rejection
+# ---------------------------------------------------------------------------
+def test_store_round_trip_property(tmp_path):
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    space = _toy_objective().space
+    fp = SpaceFingerprint.of(space, objective="toy@sim")
+
+    @hyp.given(st.lists(
+        st.tuples(st.integers(0, space.size - 1),
+                  st.one_of(st.just(math.nan),
+                            st.floats(0.1, 100, allow_nan=False)),
+                  st.sampled_from(["init", "ei", None])),
+        min_size=1, max_size=40))
+    @hyp.settings(max_examples=25, deadline=None)
+    def check(rows):
+        path = str(tmp_path / f"rt-{abs(hash(tuple(r[0] for r in rows)))}.jsonl")
+        if os.path.exists(path):
+            os.remove(path)
+        store = TuningRecordStore(path)
+        for seq, (idx, value, af) in enumerate(rows):
+            store.append(TuningRecord(
+                fp=fp.digest, run="r", seq=seq, key=str(idx), idx=idx,
+                value=value, af=af, config=space.config(idx)),
+                fingerprint=fp)
+        store.close()
+        back = TuningRecordStore(path).records(fp=fp.digest, run="r")
+        assert len(back) == len(rows)
+        for rec, (idx, value, af) in zip(back, rows):
+            assert rec.idx == idx and rec.af == af
+            assert (math.isnan(rec.value) if math.isnan(value)
+                    else rec.value == value)
+            assert rec.config == space.config(idx)
+
+    check()
+
+
+def test_resume_rejects_fingerprint_mismatch(tmp_path):
+    ck = str(tmp_path / "journal.jsonl")
+    obj_a = _toy_objective(name="toy@sim")
+    run_strategy(make_strategy("random"), obj_a, budget=10, seed=0,
+                 checkpoint_path=ck, run_id="r0")
+    # same journal path, different problem (grid changed) -> refuse
+    obj_b = _toy_objective(name="toy@sim", n_a=18)
+    run_b = TuningRun(obj_b, 10, checkpoint_path=ck, run_id="r0")
+    with pytest.raises(ValueError, match="fingerprint"):
+        run_b.resume()
+    # unrelated run id in the same file is also a mismatch, not a fresh start
+    obj_c = _toy_objective(name="other@sim")
+    run_c = TuningRun(obj_c, 10, checkpoint_path=ck, run_id="r0")
+    with pytest.raises(ValueError):
+        run_c.resume()
+
+
+def test_torn_final_line_tolerated(tmp_path):
+    ck = str(tmp_path / "j.jsonl")
+    obj = _toy_objective()
+    run_strategy(make_strategy("random"), obj, budget=8, seed=0,
+                 checkpoint_path=ck, run_id="r0")
+    with open(ck) as f:
+        full = f.read()
+    with open(ck, "w") as f:
+        f.write(full + '{"kind": "obs", "fp": "tru')   # killed mid-append
+    n = len(TuningRecordStore(ck).records())
+    assert n == 8
+
+
+# ---------------------------------------------------------------------------
+# legacy checkpoint migration
+# ---------------------------------------------------------------------------
+def test_legacy_checkpoint_migrates_and_resumes(tmp_path):
+    obj = _toy_objective()
+    ref = run_strategy(make_strategy("random"), obj, budget=20, seed=3)
+    prefix = ref.journal[:12]
+    ck = str(tmp_path / "old.json")
+    with open(ck, "w") as f:
+        json.dump({"objective": obj.name, "budget": 20,
+                   "journal": [[o.idx, o.key, o.value, o.af]
+                               for o in prefix]}, f)
+    assert is_legacy_checkpoint(ck)
+
+    res = run_strategy(make_strategy("random"), obj, budget=20, seed=3,
+                       checkpoint_path=ck, resume=True, run_id="rnd-s3")
+    assert not is_legacy_checkpoint(ck)       # rewritten as a record stream
+    assert res.unique_evals == 20
+    assert [o.key for o in res.journal] == [o.key for o in ref.journal]
+    migrated = TuningRecordStore(ck).records()
+    assert migrated[0].meta.get("migrated_from") == "engine_checkpoint"
+    assert migrated[11].config is not None
+
+
+def test_legacy_migration_rejects_wrong_objective(tmp_path):
+    obj = _toy_objective()
+    ck = str(tmp_path / "old.json")
+    with open(ck, "w") as f:
+        json.dump({"objective": "somebody_else", "budget": 5,
+                   "journal": [[0, "0", 1.0, None]]}, f)
+    fp = SpaceFingerprint.of(obj.space, objective=obj.name)
+    with pytest.raises(ValueError, match="somebody_else"):
+        migrate_checkpoint(ck, fp, obj.space)
+
+
+# ---------------------------------------------------------------------------
+# one schema for golden traces too
+# ---------------------------------------------------------------------------
+def test_golden_traces_ingest_as_records(tmp_path):
+    obj = _toy_objective()
+    store = TuningRecordStore(str(tmp_path / "store"))
+    n = ingest_golden(GOLDEN, obj, store)
+    assert n == sum(len(v["journal"]) for v in _GOLDEN.values())
+    fp = SpaceFingerprint.of(obj.space, objective=obj.name, context="golden")
+    assert len(store.records(fp=fp.digest)) == n
+    best = store.best(fp.digest)
+    assert best is not None and math.isfinite(best.value)
+    # golden journals carry real values: best matches the journals' min
+    lo = min(v for case in _GOLDEN.values()
+             for _, v, _ in case["journal"] if v is not None)
+    assert best.value == pytest.approx(lo)
+
+
+# ---------------------------------------------------------------------------
+# warm start
+# ---------------------------------------------------------------------------
+def test_warm_matches_exact_and_cross(tmp_path):
+    store_path = str(tmp_path / "store")
+    src = _toy_objective(seed=1, shift=0.02, n_a=18, name="toy#512")
+    run_strategy(make_strategy("ei"), src, budget=30, seed=0,
+                 store=store_path)
+    tgt = _toy_objective(name="toy#4096")
+    store = TuningRecordStore(store_path)
+    fp = SpaceFingerprint.of(tgt.space, objective=tgt.name)
+    warm = warm_matches(store, fp, tgt.space)
+    assert warm, "no cross-size matches found"
+    assert all(not w.exact and w.noise > 0 for w in warm)
+    assert all(0 <= w.idx < tgt.space.size for w in warm)
+    assert len({w.idx for w in warm}) == len(warm), "dedup failed"
+    # exact matches take priority and carry no discount
+    run_strategy(make_strategy("ei"), tgt, budget=30, seed=5,
+                 store=store_path, warm_start=False)
+    warm2 = warm_matches(TuningRecordStore(store_path), fp, tgt.space)
+    assert any(w.exact and w.noise == 0.0 for w in warm2)
+
+
+def test_warm_start_reduces_evals_on_unseen_scenario(tmp_path):
+    """The ISSUE acceptance regression, small-space edition: prior records
+    from one problem size must cut evaluations-to-cold-best by >= 30% on a
+    compatible unseen size (full-size run: benchmarks/warm_start.py)."""
+    store_path = str(tmp_path / "store")
+    src = make_scenario_objective("adding", "a100", "seq512")
+    tgt = make_scenario_objective("adding", "a100", "seq4096")
+    assert src.space.size != tgt.space.size     # genuinely different spaces
+    run_strategy(make_strategy("ei"), src, budget=40, seed=100,
+                 store=store_path)
+
+    cold = run_strategy(make_strategy("ei"), tgt, budget=40, seed=0)
+    warm = run_strategy(make_strategy("ei"), tgt, budget=40, seed=0,
+                        store=store_path)
+    hit_c = np.flatnonzero(cold.trace <= cold.best_value + 1e-12)
+    hit_w = np.flatnonzero(warm.trace <= cold.best_value + 1e-12)
+    assert hit_w.size, "warm run never reached the cold best"
+    c, w = int(hit_c[0]) + 1, int(hit_w[0]) + 1
+    assert w <= 0.7 * c, f"warm start saved too little: {w} vs {c} evals"
+
+
+def test_warm_start_ignores_unmatchable_records(tmp_path):
+    """Records for an incompatible space must not reach the strategy."""
+    store_path = str(tmp_path / "store")
+    other = SimulatedObjective(
+        SearchSpace([Param("z", tuple(range(10)))], name="1d"),
+        np.linspace(1, 2, 10), name="other@sim")
+    run_strategy(make_strategy("random"), other, budget=5, seed=0,
+                 store=store_path)
+    tgt = _toy_objective()
+    fp = SpaceFingerprint.of(tgt.space, objective=tgt.name)
+    assert warm_matches(TuningRecordStore(store_path), fp, tgt.space) == []
+    # and a full run over such a store matches the no-store run exactly
+    a = run_strategy(make_strategy("ei"), tgt, budget=25, seed=0)
+    b = run_strategy(make_strategy("ei"), tgt, budget=25, seed=0,
+                     store=store_path)
+    assert [o.key for o in a.journal] == [o.key for o in b.journal]
+
+
+# ---------------------------------------------------------------------------
+# serve-side resolution
+# ---------------------------------------------------------------------------
+def test_best_sharding_config_resolution(tmp_path):
+    from repro.core.tuning_targets import sharding_space
+    from repro.parallel.sharding import ParallelConfig
+
+    arch, shape = "internlm2-1.8b", "decode_32k"
+    space = sharding_space(arch, shape)
+    fp = SpaceFingerprint.of(space,
+                             objective=f"dryrun[{arch}×{shape}×single]")
+    store_path = str(tmp_path / "store")
+    store = TuningRecordStore(store_path)
+    for seq, (i, v) in enumerate([(3, 1.25), (17, 0.75), (40, 2.0)]):
+        store.append(TuningRecord(fp=fp.digest, run="tune", seq=seq,
+                                  key=str(i), idx=i, value=v,
+                                  config=space.config(i)), fingerprint=fp)
+    store.close()
+
+    hit = best_sharding_config(store_path, arch, shape)
+    assert hit is not None
+    cfg, val = hit
+    assert val == 0.75 and cfg == space.config(17)
+    assert best_sharding_config(store_path, arch, "train_4k") is None
+    assert best_sharding_config(str(tmp_path / "nope"), arch, shape) is None
+
+    pcfg = apply_sharding_config(
+        ParallelConfig(flash_threshold=1 << 30, logits_chunk=0), cfg)
+    assert pcfg.remat == cfg["remat"]
+    assert pcfg.logits_chunk == cfg["logits_chunk"]
+    assert pcfg.attn_block_kv == cfg["attn_block_kv"]
+    assert pcfg.flash_threshold == (0 if cfg["flash"] else 1 << 30)
+
+
+def test_bare_checkpoint_never_warm_starts_and_fresh_run_overwrites(tmp_path):
+    """A journal file is resume-only state: reusing the path for a fresh
+    (non-resume) run replaces it — the pre-store semantics — and its records
+    never warm-start anything (only an explicit shared store transfers)."""
+    ck = str(tmp_path / "ck.json")
+    obj = _toy_objective()
+    run_strategy(make_strategy("ei"), obj, budget=15, seed=0,
+                 checkpoint_path=ck)
+    ref = run_strategy(make_strategy("ei"), obj, budget=15, seed=1)
+    # same path, different seed, no resume: must match the no-checkpoint run
+    # bit-for-bit (no warm start from seed 0) and replace the journal
+    res = run_strategy(make_strategy("ei"), obj, budget=15, seed=1,
+                       checkpoint_path=ck)
+    assert [o.key for o in res.journal] == [o.key for o in ref.journal]
+    recs = TuningRecordStore(ck).records()
+    assert [r.key for r in recs] == [o.key for o in ref.journal]
+
+
+def test_records_carry_worker_and_duration(tmp_path):
+    store_path = str(tmp_path / "store")
+    run_strategy(make_strategy("random"), _toy_objective(), budget=16, seed=0,
+                 batch_size=4, workers=4, store=store_path)
+    recs = TuningRecordStore(store_path).records()
+    assert len({r.worker for r in recs}) > 1, "worker attribution lost"

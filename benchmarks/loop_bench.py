@@ -1,0 +1,115 @@
+"""Online-loop microbenchmarks: the serve-side cost of staying live.
+
+Every decode step in ``--online`` serving pays (a) a store poll when the
+tail is quiet and (b) a swap decision when records land. Both sit on the
+latency path between decode batches, so they must be cheap relative to a
+decode step (~tens of ms):
+
+  * ``poll_quiet``    — StoreWatcher.poll() on an unchanged store (stat-only
+                        fast path), the per-step steady-state cost;
+  * ``tail_follow``   — records/s a tail-following reader sustains against
+                        a per-record-flushing writer (the full parse path);
+  * ``hot_resolve``   — HotConfigSource.refresh() folding one freshly landed
+                        record into the deployed-best decision.
+
+  PYTHONPATH=src python -m benchmarks.loop_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+
+from benchmarks.common import emit, save_json
+from repro.core.tuning_targets import sharding_space
+from repro.store import (HotConfigSource, SpaceFingerprint, StoreWatcher,
+                         TuningRecord, TuningRecordStore, cell_objective)
+
+ARCH, SHAPE = "internlm2-1.8b", "decode_32k"
+
+
+def _mk_store(path: str):
+    space = sharding_space(ARCH, SHAPE)
+    fp = SpaceFingerprint.of(space, objective=cell_objective(ARCH, SHAPE))
+    store = TuningRecordStore(path)
+    return space, fp, store
+
+
+def _rec(space, fp, seq: int, value: float) -> TuningRecord:
+    idx = seq % space.size
+    return TuningRecord(fp=fp.digest, run="bench", seq=seq, key=str(idx),
+                        idx=idx, value=value, config=space.config(idx))
+
+
+def bench_poll_quiet(path: str, n: int) -> float:
+    space, fp, store = _mk_store(os.path.join(path, "store"))
+    store.append(_rec(space, fp, 0, 1.0), fingerprint=fp)
+    store.close()
+    # a store that has been quiet long enough for the watcher to trust its
+    # segment-discovery cache — the steady state this bench measures
+    aged = time.time() - 60
+    os.utime(os.path.join(path, "store"), (aged, aged))
+    watcher = StoreWatcher(os.path.join(path, "store"))
+    watcher.poll()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        watcher.poll()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_tail_follow(path: str, n: int) -> float:
+    space, fp, store = _mk_store(os.path.join(path, "store"))
+    watcher = StoreWatcher(os.path.join(path, "store"))
+    t0 = time.perf_counter()
+    got = 0
+    for seq in range(n):
+        store.append(_rec(space, fp, seq, 1.0 + seq * 1e-6), fingerprint=fp)
+        got += len(watcher.poll())
+    dt = time.perf_counter() - t0
+    store.close()
+    assert got == n, f"tail lost records: {got}/{n}"
+    return n / dt
+
+
+def bench_hot_resolve(path: str, n: int) -> float:
+    space, fp, store = _mk_store(os.path.join(path, "store"))
+    source = HotConfigSource(os.path.join(path, "store"), ARCH, SHAPE)
+    swaps = 0
+    t0 = time.perf_counter()
+    for seq in range(n):
+        # each record strictly better: every refresh takes the swap path
+        store.append(_rec(space, fp, seq, 1.0 - seq * 1e-4), fingerprint=fp)
+        swaps += source.refresh() is not None
+    dt = time.perf_counter() - t0
+    store.close()
+    assert swaps == n
+    return (dt / n) * 1e6
+
+
+def main() -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    n = 200 if args.smoke else 2000
+
+    rows = {}
+    for name, fn, unit in (("poll_quiet", bench_poll_quiet, "us/poll"),
+                           ("tail_follow", bench_tail_follow, "records/s"),
+                           ("hot_resolve", bench_hot_resolve, "us/refresh")):
+        d = tempfile.mkdtemp(prefix=f"loopbench-{name}-")
+        try:
+            val = fn(d, n)
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        rows[name] = {"value": val, "unit": unit, "n": n}
+        emit(f"loop_{name}", val if unit != "records/s" else 1e6 / val,
+             f"{val:,.0f} {unit}")
+    if not args.smoke:
+        save_json("online_loop", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

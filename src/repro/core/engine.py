@@ -49,6 +49,71 @@ from repro.store.transfer import warm_matches
 _PROC_OBJECTIVE: Optional[Objective] = None
 
 
+@dataclass(frozen=True)
+class RetuneRequest:
+    """A serving-side ask for fresh tuning of one cell (DESIGN.md §12).
+
+    Emitted by the online serve loop when observed prod latency diverges
+    from the deployed config's stored roofline prediction; serviced by any
+    tuner with access to the shared store (``run_retune``), whose journal
+    the serving fleet then hot-reloads."""
+
+    key: str                 # dedupe key: the cell, e.g. "dryrun[a×s×m]"
+    objective: str = ""      # tuning-objective id of the cell
+    observed: float = math.nan    # windowed median prod latency (s)
+    predicted: float = math.nan   # stored roofline step time (s)
+    reason: str = "drift"
+    t: float = 0.0
+
+
+class RetuneQueue:
+    """Thread-safe intake for drift-triggered re-tune requests.
+
+    One pending request per cell: a fleet of servers all observing the same
+    drifted cell collapses to a single re-tune instead of a stampede. The
+    key re-arms once the request is popped (taken by a tuner)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queue: Deque[RetuneRequest] = deque()
+        self._pending: set = set()
+
+    def submit(self, req: RetuneRequest) -> bool:
+        """Enqueue unless the cell already has a pending request."""
+        with self._lock:
+            if req.key in self._pending:
+                return False
+            self._pending.add(req.key)
+            self._queue.append(req)
+            return True
+
+    def pop(self) -> Optional[RetuneRequest]:
+        with self._lock:
+            if not self._queue:
+                return None
+            req = self._queue.popleft()
+            self._pending.discard(req.key)
+            return req
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+
+def run_retune(request: RetuneRequest, objective: Objective, strategy, *,
+               store, budget: int, seed: int = 0, **engine_kw):
+    """Service one re-tune request: a warm-started engine run journaled into
+    the shared ``store`` under a request-derived run id. Prior records for
+    the cell — including the ``context="prod"`` telemetry that triggered the
+    request — seed the strategy through the standard warm-start path, so a
+    drift re-tune starts from everything serving has learned. The serving
+    fleet picks the new records up by tailing the same store."""
+    engine = ParallelTuningEngine(
+        objective, budget, store=store,
+        run_id=f"retune[{request.key}]@{request.t:g}", **engine_kw)
+    return engine.run(strategy, seed=seed)
+
+
 def _proc_init(objective: Objective) -> None:
     global _PROC_OBJECTIVE
     _PROC_OBJECTIVE = objective

@@ -7,6 +7,14 @@ Distribution/performance knobs come from the tuning-record store when one is
 given (``--store``): the best prior tuning result for this (arch, shape,
 mesh) cell overrides the built-in defaults, so serving inherits every past
 tuning run's work. No record -> defaults, loudly.
+
+``--online`` closes the loop (DESIGN.md §12): the server tail-follows the
+store between decode steps and atomically swaps in a strictly better config
+when one lands (no restart — params and KV cache survive, only the step
+functions are re-derived), writes measured per-step latencies back as
+``context="prod"`` records that warm-start future tuning runs, and flags a
+re-tune when observed latency drifts off the stored roofline prediction by
+``--drift-factor``.
 """
 from __future__ import annotations
 
@@ -20,7 +28,9 @@ from repro.configs.registry import get_arch, smoke_config
 from repro.models.params import init_params
 from repro.models.stepfn import make_decode_step, make_prefill_step
 from repro.parallel.sharding import ParallelConfig, ShardCtx
-from repro.store import apply_sharding_config, best_sharding_config
+from repro.store import (DriftMonitor, HotConfigSource, OnlineServeLoop,
+                         ProdRecorder, apply_sharding_config,
+                         best_sharding_config)
 
 
 def resolve_pcfg(pcfg: ParallelConfig, store: str, arch: str, shape: str,
@@ -37,6 +47,88 @@ def resolve_pcfg(pcfg: ParallelConfig, store: str, arch: str, shape: str,
     return apply_sharding_config(pcfg, cfg)
 
 
+class DecodeServer:
+    """Data plane of one serving process: params, KV cache, decode state,
+    and jitted step functions derived from the current ParallelConfig.
+
+    ``apply_config`` is the hot-reload point the online loop calls between
+    decode batches: it overlays a stored tuning config and re-derives the
+    step functions — params, cache, and generated tokens all survive, so a
+    swap never costs a restart (only the first step's re-jit).
+    """
+
+    def __init__(self, cfg, pcfg: ParallelConfig, *, batch: int,
+                 prompt_len: int, decode_steps: int, seed: int = 0):
+        self.cfg = cfg
+        self.pcfg = pcfg
+        self.prompt_len = prompt_len
+        self.cache_cap = prompt_len + decode_steps
+        self.key = jax.random.PRNGKey(seed)
+        self.params = init_params(cfg, self.key)
+        self.batch_size = batch
+        self.cache = None
+        self.toks = None
+        self.out = []
+        self.pos = 0
+        self.swaps = 0
+        self._derive()
+
+    def _derive(self) -> None:
+        px = ShardCtx(mesh=None, pcfg=self.pcfg)
+        self.prefill = jax.jit(make_prefill_step(self.cfg, px,
+                                                 cache_cap=self.cache_cap))
+        self.decode = jax.jit(make_decode_step(self.cfg, px))
+
+    def apply_config(self, cfg_dict) -> None:
+        self.pcfg = apply_sharding_config(self.pcfg, cfg_dict)
+        self._derive()
+        self.swaps += 1
+
+    def input_batch(self):
+        cfg, B = self.cfg, self.batch_size
+        if cfg.frontend == "embeddings":
+            batch = {"frame_embeddings": jax.random.normal(
+                self.key, (B, self.prompt_len, cfg.d_model),
+                jnp.dtype(cfg.dtype))}
+            if cfg.cross_attention:
+                batch["cond"] = jax.random.normal(
+                    self.key, (B, cfg.cross_seq, cfg.d_model),
+                    jnp.dtype(cfg.dtype))
+        else:
+            batch = {"tokens": jax.random.randint(
+                self.key, (B, self.prompt_len), 0, cfg.vocab_size)}
+        return batch
+
+    def prefill_batch(self, batch) -> float:
+        t0 = time.time()
+        logits, self.cache = self.prefill(self.params, batch)
+        logits.block_until_ready()
+        self.logits_shape = logits.shape
+        self.toks = jnp.argmax(logits, -1)
+        self.out = [self.toks]
+        self.pos = self.prompt_len
+        return time.time() - t0
+
+    def decode_step(self) -> float:
+        """One decode step over the held state; returns measured seconds."""
+        t0 = time.time()
+        pos = jnp.asarray(self.pos, jnp.int32)
+        if self.cfg.frontend == "embeddings":
+            emb = self.params["lm_head"]["w"][:, self.toks].T[:, None, :] \
+                .astype(jnp.dtype(self.cfg.dtype))
+            step_batch = {"frame_embeddings": emb}
+        else:
+            step_batch = {"tokens": self.toks[:, None]}
+        logits, self.cache = self.decode(self.params, self.cache, step_batch,
+                                         pos)
+        toks = jnp.argmax(logits, -1)
+        toks.block_until_ready()
+        self.toks = toks
+        self.out.append(toks)
+        self.pos += 1
+        return time.time() - t0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -51,54 +143,85 @@ def main() -> None:
     ap.add_argument("--tuned-shape", default="decode_32k",
                     help="dry-run shape whose tuning records configure "
                          "this server")
+    ap.add_argument("--online", action="store_true",
+                    help="tail the store between decode steps (hot config "
+                         "reload), write prod-latency records back, flag "
+                         "drift re-tunes (requires --store)")
+    ap.add_argument("--drift-factor", type=float, default=1.5,
+                    help="re-tune when median prod latency is off the "
+                         "stored roofline by this factor either way")
+    ap.add_argument("--poll-every", type=int, default=4,
+                    help="decode steps between store polls in --online mode")
     args = ap.parse_args()
+    if args.online and not args.store:
+        ap.error("--online requires --store")
 
     cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
     pcfg = ParallelConfig(flash_threshold=1 << 30, logits_chunk=0)
-    if args.store:
-        pcfg = resolve_pcfg(pcfg, args.store, args.arch, args.tuned_shape)
-    px = ShardCtx(mesh=None, pcfg=pcfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
-
-    cap = args.prompt_len + args.decode_steps
-    prefill = jax.jit(make_prefill_step(cfg, px, cache_cap=cap))
-    decode = jax.jit(make_decode_step(cfg, px))
-
-    B = args.batch
-    if cfg.frontend == "embeddings":
-        batch = {"frame_embeddings": jax.random.normal(
-            key, (B, args.prompt_len, cfg.d_model), jnp.dtype(cfg.dtype))}
-        if cfg.cross_attention:
-            batch["cond"] = jax.random.normal(
-                key, (B, cfg.cross_seq, cfg.d_model), jnp.dtype(cfg.dtype))
-    else:
-        batch = {"tokens": jax.random.randint(key, (B, args.prompt_len), 0,
-                                              cfg.vocab_size)}
-
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    print(f"[serve] prefill B={B} S={args.prompt_len}: "
-          f"{(time.time()-t0)*1e3:.0f} ms, logits {logits.shape}")
-
-    toks = jnp.argmax(logits, -1)
-    out = [toks]
-    t0 = time.time()
-    for i in range(args.decode_steps):
-        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-        if cfg.frontend == "embeddings":
-            emb = params["lm_head"]["w"][:, toks].T[:, None, :].astype(
-                jnp.dtype(cfg.dtype))
-            step_batch = {"frame_embeddings": emb}
+    source = None
+    if args.online:
+        # one code path for startup resolution AND hot reload: the first
+        # refresh replays the store; later refreshes see only new records
+        source = HotConfigSource(args.store, args.arch, args.tuned_shape)
+        hit = source.refresh()
+        if hit is None:
+            print(f"[serve] no tuning record for ({args.arch}, "
+                  f"{args.tuned_shape}, single) in {args.store} — using "
+                  "built-in defaults")
         else:
-            step_batch = {"tokens": toks[:, None]}
-        logits, cache = decode(params, cache, step_batch, pos)
-        toks = jnp.argmax(logits, -1)
-        out.append(toks)
-    dt = time.time() - t0
-    print(f"[serve] decoded {args.decode_steps} steps x B={B}: "
-          f"{dt*1e3:.0f} ms ({dt/args.decode_steps*1e3:.1f} ms/step)")
-    print("[serve] sample tokens:", [int(t[0]) for t in out][:12])
+            print(f"[serve] tuned config from store ({hit[1]:.3f}s "
+                  f"roofline): {hit[0]}")
+            pcfg = apply_sharding_config(pcfg, hit[0])
+    elif args.store:
+        pcfg = resolve_pcfg(pcfg, args.store, args.arch, args.tuned_shape)
+
+    server = DecodeServer(cfg, pcfg, batch=args.batch,
+                          prompt_len=args.prompt_len,
+                          decode_steps=args.decode_steps, seed=args.seed)
+    batch = server.input_batch()
+    dt_prefill = server.prefill_batch(batch)
+    print(f"[serve] prefill B={args.batch} S={args.prompt_len}: "
+          f"{dt_prefill*1e3:.0f} ms, logits {server.logits_shape}")
+
+    if args.online:
+        from repro.core.engine import RetuneQueue
+        recorder = ProdRecorder(args.store, args.arch, args.tuned_shape)
+        # prefill latency is telemetry, not a decode-step observation: it
+        # includes the prefill jit compile and is in different units than
+        # the tuned step time — journaled configless so it never transfers
+        recorder.record(None, dt_prefill, phase="prefill")
+        monitor = DriftMonitor(source.current[1] if source.current else None,
+                               factor=args.drift_factor)
+        queue = RetuneQueue()
+        loop = OnlineServeLoop(server, source, recorder=recorder,
+                               monitor=monitor, retune_queue=queue,
+                               cell_key=source.objective_id,
+                               poll_every=args.poll_every,
+                               first_step_warmup=True)
+        t0 = time.time()
+        stats = loop.run(args.decode_steps)
+        dt = time.time() - t0
+        print(f"[serve] decoded {args.decode_steps} steps x B={args.batch}: "
+              f"{dt*1e3:.0f} ms ({dt/args.decode_steps*1e3:.1f} ms/step)")
+        for step, cfg_new, value in stats.swaps:
+            print(f"[serve] hot-reload at step {step}: {value:.3f}s "
+                  f"roofline {cfg_new}")
+        print(f"[serve] online: {recorder.count} prod records, "
+              f"{len(stats.swaps)} hot reloads, "
+              f"{stats.retunes_requested} re-tune requests pending")
+        req = queue.pop()
+        if req is not None:
+            print(f"[serve] drift: observed {req.observed*1e3:.1f} ms/step "
+                  f"vs {req.predicted*1e3:.1f} ms predicted — re-tune "
+                  f"{req.key} requested")
+    else:
+        t0 = time.time()
+        for _ in range(args.decode_steps):
+            server.decode_step()
+        dt = time.time() - t0
+        print(f"[serve] decoded {args.decode_steps} steps x B={args.batch}: "
+              f"{dt*1e3:.0f} ms ({dt/args.decode_steps*1e3:.1f} ms/step)")
+    print("[serve] sample tokens:", [int(t[0]) for t in server.out][:12])
 
 
 if __name__ == "__main__":

@@ -10,9 +10,15 @@ from repro.store.records import (SpaceFingerprint, TuningRecord,
 from repro.store.transfer import warm_matches
 from repro.store.migrate import (ingest_golden, is_legacy_checkpoint,
                                  migrate_checkpoint)
-from repro.store.resolve import apply_sharding_config, best_sharding_config
+from repro.store.resolve import (apply_sharding_config, best_sharding_config,
+                                 cell_objective)
+from repro.store.watch import (DriftMonitor, HotConfigSource, OnlineServeLoop,
+                               ProdRecorder, ServeStats, StoreWatcher,
+                               prod_objective)
 
 __all__ = ["SpaceFingerprint", "TuningRecord", "TuningRecordStore",
            "warm_matches", "ingest_golden", "is_legacy_checkpoint",
            "migrate_checkpoint", "apply_sharding_config",
-           "best_sharding_config"]
+           "best_sharding_config", "cell_objective", "prod_objective",
+           "StoreWatcher", "HotConfigSource", "ProdRecorder", "DriftMonitor",
+           "OnlineServeLoop", "ServeStats"]

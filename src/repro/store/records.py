@@ -28,6 +28,7 @@ import hashlib
 import json
 import math
 import os
+import re
 from dataclasses import dataclass, field
 from functools import cached_property
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
@@ -167,10 +168,33 @@ def _is_single_file(path: str) -> bool:
     return path.endswith((".json", ".jsonl"))
 
 
+def natural_key(name: str) -> Tuple:
+    """Digit-aware sort key: ``segment-<pid>-10`` after ``segment-<pid>-2``
+    (plain lexicographic order breaks past ten rollovers of one writer)."""
+    return tuple(int(tok) if tok.isdigit() else tok
+                 for tok in re.split(r"(\d+)", name))
+
+
+def list_segments(path: str, single_file: bool) -> List[str]:
+    """A store's segment files in rollover order — the one definition both
+    the loader and the live watcher must agree on."""
+    if single_file:
+        return [path] if os.path.exists(path) else []
+    if not os.path.isdir(path):
+        return []
+    names = sorted((f for f in os.listdir(path) if f.endswith(".jsonl")),
+                   key=natural_key)
+    return [os.path.join(path, f) for f in names]
+
+
 class TuningRecordStore:
     """Append-only JSONL segments + in-memory index by fingerprint digest."""
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, *, load: bool = True):
+        """``load=False`` opens a write-only appender: no segment parse, no
+        in-memory index — O(1) startup however large the store has grown.
+        For producers that only ever ``append`` (serving telemetry); queries
+        on such an instance see only its own appends."""
         self.path = path
         self.single_file = _is_single_file(path)
         self._records: List[TuningRecord] = []
@@ -178,17 +202,12 @@ class TuningRecordStore:
         self._fps: Dict[str, SpaceFingerprint] = {}
         self._fh = None                    # lazy append handle
         self._written_fps: set = set()     # descriptors this handle has written
-        self._load()
+        if load:
+            self._load()
 
     # -- loading ------------------------------------------------------------
     def _segments(self) -> List[str]:
-        if self.single_file:
-            return [self.path] if os.path.exists(self.path) else []
-        if not os.path.isdir(self.path):
-            return []
-        return sorted(os.path.join(self.path, f)
-                      for f in os.listdir(self.path)
-                      if f.endswith(".jsonl"))
+        return list_segments(self.path, self.single_file)
 
     def _load(self) -> None:
         for seg in self._segments():

@@ -19,6 +19,13 @@ _PCFG_FIELDS = ("remat", "attn_q_chunks", "logits_chunk", "attn_block_kv",
                 "mlstm_chunk")
 
 
+def cell_objective(arch: str, shape: str, mesh: str = "single") -> str:
+    """Tuning-objective id of one serving cell — the string every layer
+    (dry-run tuner, store resolution, hot reload) keys the cell's
+    fingerprints on."""
+    return f"dryrun[{arch}×{shape}×{mesh}]"
+
+
 def best_sharding_config(store, arch: str, shape: str, mesh: str = "single",
                          wide: bool = False
                          ) -> Optional[Tuple[Dict[str, Any], float]]:
@@ -30,19 +37,20 @@ def best_sharding_config(store, arch: str, shape: str, mesh: str = "single",
         store = TuningRecordStore(store)
     from repro.core.tuning_targets import sharding_space
     space = sharding_space(arch, shape, wide=wide)
-    fp = SpaceFingerprint.of(space,
-                             objective=f"dryrun[{arch}×{shape}×{mesh}]")
+    fp = SpaceFingerprint.of(space, objective=cell_objective(arch, shape, mesh))
     hit = store.best_config(fp)
     if hit is not None:
         return hit
     # a narrow-space record also serves a wide lookup (and vice versa): any
-    # same-named sharding fingerprint for this cell beats the defaults
+    # same-named sharding fingerprint for this cell beats the defaults —
+    # minimum over ALL compatible fingerprints, not the first one seen
+    best: Optional[Tuple[Dict[str, Any], float]] = None
     for digest, desc in store.fingerprints().items():
         if desc.objective == fp.objective and digest != fp.digest:
             alt = store.best_config(digest)
-            if alt is not None:
-                return alt
-    return None
+            if alt is not None and (best is None or alt[1] < best[1]):
+                best = alt
+    return best
 
 
 def apply_sharding_config(pcfg, cfg: Dict[str, Any]):

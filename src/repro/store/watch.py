@@ -1,0 +1,401 @@
+"""Online store layer: live tail, prod-latency writeback, drift (DESIGN.md §12).
+
+The record store made tuning knowledge persistent; this module closes the
+loop at serve time:
+
+  * ``StoreWatcher`` tail-follows a store's segments by (mtime, byte offset)
+    and yields records appended since the last poll — every record exactly
+    once, in write order, tolerating a torn (partially flushed) final line
+    and segment rollover, without ever re-reading consumed bytes;
+  * ``HotConfigSource`` folds the watched stream into "best tuning config
+    for one serving cell" and tells the server when a strictly better record
+    has landed, so a fleet re-resolves mid-flight instead of at startup only;
+  * ``ProdRecorder`` writes measured per-step serving latencies back into
+    the store as ``context="prod"`` records under the cell's parameter
+    family, so subsequent tuning runs warm-start from real telemetry via the
+    existing ``repro.store.transfer.warm_matches`` cross-fingerprint path;
+  * ``DriftMonitor`` flags when observed prod latency diverges from the
+    stored roofline prediction by a configurable factor, and
+    ``OnlineServeLoop`` turns that into a ``RetuneRequest`` on the engine's
+    intake queue (repro.core.engine.RetuneQueue).
+
+Everything here is control plane: no jax, no threads, no wall-clock sleeps.
+Time enters only through an injectable ``clock`` and latencies measured by
+the caller, which is what makes the full store → serve → store cycle
+drivable by the deterministic simulation harness (tests/loop_sim.py).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.store.records import (SpaceFingerprint, TuningRecord,
+                                 TuningRecordStore, _is_single_file,
+                                 list_segments)
+from repro.store.resolve import cell_objective
+
+
+def prod_objective(arch: str, shape: str, mesh: str = "single") -> str:
+    """Objective id for serving-telemetry records of a cell. Distinct from
+    the tuning id (``cell_objective``) so measured latencies never win a
+    ``best_sharding_config`` resolution — they transfer only through the
+    warm-start cross-fingerprint path, discounted by the GP."""
+    return f"prod[{arch}×{shape}×{mesh}]"
+
+
+#: How long a directory mtime must have been stable before the watcher
+#: trusts its segment-discovery cache: filesystems with coarse timestamp
+#: granularity (1-2 s) can create a segment without advancing the mtime.
+_DIR_SETTLE_NS = 2_000_000_000
+
+
+@dataclass
+class _Tail:
+    """Read position in one segment: only COMPLETE lines are consumed, so a
+    torn final line (killed or mid-flush writer) is left for the next poll."""
+    offset: int = 0
+    mtime: float = -1.0
+
+
+class StoreWatcher:
+    """Incremental reader over a live store's segments.
+
+    ``poll()`` returns the observations appended since the last call (and
+    absorbs fingerprint descriptors into ``fingerprints()``). With
+    ``from_start=True`` the first poll replays the whole store — that is how
+    a serving process does its initial resolution and its hot reloads
+    through one code path.
+    """
+
+    def __init__(self, path: str, *, from_start: bool = True):
+        self.path = path
+        self.single_file = _is_single_file(path)
+        self._tails: Dict[str, _Tail] = {}
+        self._fps: Dict[str, SpaceFingerprint] = {}
+        self._dir_mtime_ns = -1       # segment-discovery cache (dir mode)
+        if not from_start:
+            for seg in self._segments():
+                try:
+                    st = os.stat(seg)
+                except FileNotFoundError:
+                    continue
+                self._tails[seg] = _Tail(offset=st.st_size, mtime=st.st_mtime)
+
+    def _segments(self) -> List[str]:
+        return list_segments(self.path, self.single_file)
+
+    def fingerprints(self) -> Dict[str, SpaceFingerprint]:
+        return dict(self._fps)
+
+    def poll(self) -> List[TuningRecord]:
+        """New complete observations, in write order (per segment; segments
+        in rollover order — known segments first, newly discovered after)."""
+        out: List[TuningRecord] = []
+        known = list(self._tails)
+        fresh: List[str] = []
+        if self.single_file:
+            fresh = [s for s in self._segments() if s not in self._tails]
+        else:
+            # appends don't touch the directory mtime, segment creation
+            # does: skip the listdir on the quiet path (the per-decode-step
+            # poll tax is a handful of stats, not a directory scan). An
+            # mtime still inside the filesystem's granularity window is
+            # never trusted — a segment created in the same timestamp tick
+            # as the cached value would otherwise be missed forever.
+            try:
+                dir_mtime_ns = os.stat(self.path).st_mtime_ns
+            except FileNotFoundError:
+                dir_mtime_ns = -1
+            if (dir_mtime_ns != self._dir_mtime_ns
+                    or time.time_ns() - dir_mtime_ns < _DIR_SETTLE_NS):
+                fresh = [s for s in self._segments()
+                         if s not in self._tails]
+                self._dir_mtime_ns = dir_mtime_ns
+        for seg in known + fresh:
+            tail = self._tails.setdefault(seg, _Tail())
+            try:
+                st = os.stat(seg)
+            except FileNotFoundError:
+                continue
+            if st.st_size <= tail.offset and st.st_mtime == tail.mtime:
+                continue
+            tail.mtime = st.st_mtime
+            if st.st_size <= tail.offset:
+                continue
+            with open(seg, "rb") as f:
+                f.seek(tail.offset)
+                data = f.read()
+            lines = data.split(b"\n")
+            partial = lines.pop()          # b"" when data ends in a newline
+            for line in lines:
+                tail.offset += len(line) + 1
+                text = line.decode("utf-8").strip()
+                if not text:
+                    continue
+                d = json.loads(text)
+                kind = d.get("kind")
+                if kind == "fp":
+                    fp = SpaceFingerprint.from_json(d)
+                    self._fps.setdefault(fp.digest, fp)
+                elif kind == "obs":
+                    out.append(TuningRecord.from_json(d))
+                else:
+                    raise ValueError(f"{seg}:@{tail.offset}: unknown record "
+                                     f"kind {kind!r}")
+            del partial  # torn tail stays unconsumed until its newline lands
+        return out
+
+
+class HotConfigSource:
+    """Best stored tuning config for one serving cell, live.
+
+    Resolution mirrors ``repro.store.resolve.best_sharding_config``: the
+    cell's exact fingerprint wins; any compatible fingerprint with the same
+    tuning objective id is the cross-digest fallback (minimum over all of
+    them). ``refresh()`` folds newly landed records in and returns the
+    ``(config, value)`` to deploy when it is strictly better than what is
+    currently deployed — the atomic-swap decision point for the serve loop.
+    """
+
+    def __init__(self, path: str, arch: str, shape: str,
+                 mesh: str = "single", *, wide: bool = False):
+        from repro.core.tuning_targets import sharding_space
+        space = sharding_space(arch, shape, wide=wide)
+        self.objective_id = cell_objective(arch, shape, mesh)
+        self.fp = SpaceFingerprint.of(space, objective=self.objective_id)
+        self.watcher = StoreWatcher(path, from_start=True)
+        self._best_exact: Optional[Tuple[Dict[str, Any], float]] = None
+        self._best_cross: Optional[Tuple[Dict[str, Any], float]] = None
+        self.current: Optional[Tuple[Dict[str, Any], float]] = None
+        self._current_tier = 1        # 0 = exact fingerprint, 1 = fallback
+
+    def _fold(self, rec: TuningRecord) -> None:
+        if rec.config is None or not math.isfinite(rec.value):
+            return
+        if rec.fp == self.fp.digest:
+            if self._best_exact is None or rec.value < self._best_exact[1]:
+                self._best_exact = (dict(rec.config), rec.value)
+            return
+        desc = self.watcher.fingerprints().get(rec.fp)
+        if desc is not None and desc.objective == self.objective_id:
+            if self._best_cross is None or rec.value < self._best_cross[1]:
+                self._best_cross = (dict(rec.config), rec.value)
+
+    def refresh(self) -> Optional[Tuple[Dict[str, Any], float]]:
+        """Poll the store; return the new (config, value) iff the server
+        should swap. Precedence matches a restarting server's resolution,
+        so a fleet converges on one config regardless of restart history:
+        an exact-fingerprint record outranks any cross-digest fallback
+        (even a lower-valued one — exact is the cell's own measured
+        problem); within a tier, only a strictly lower roofline value
+        swaps. Returns None when nothing should change."""
+        for rec in self.watcher.poll():
+            self._fold(rec)
+        if self._best_exact is not None:
+            cand, tier = self._best_exact, 0
+        elif self._best_cross is not None:
+            cand, tier = self._best_cross, 1
+        else:
+            return None
+        if self.current is not None:
+            if (tier, cand[1]) >= (self._current_tier, self.current[1]):
+                return None
+            if cand[0] == self.current[0]:
+                # same config, re-ranked (better value or exact record for
+                # the deployed fallback): no swap, no re-jit
+                self.current, self._current_tier = cand, tier
+                return None
+        self.current, self._current_tier = cand, tier
+        return cand
+
+
+class ProdRecorder:
+    """Serving telemetry → store: measured latencies as ``context="prod"``
+    records under the cell's parameter family (same grids as the tuning
+    space, ``prod_objective`` id), so ``warm_matches`` transfers them into
+    future tuning runs as discounted cross-fingerprint priors."""
+
+    def __init__(self, store, arch: str, shape: str, mesh: str = "single", *,
+                 wide: bool = False, run_id: Optional[str] = None,
+                 clock=time.time):
+        from repro.core.tuning_targets import sharding_space
+        # a path opens write-only: the recorder only ever appends, and a
+        # fleet-scale store must not be parsed into memory per server
+        self.store = (TuningRecordStore(store, load=False)
+                      if isinstance(store, str) else store)
+        self.space = sharding_space(arch, shape, wide=wide)
+        self.fp = SpaceFingerprint.of(
+            self.space, objective=prod_objective(arch, shape, mesh),
+            context="prod")
+        self.run_id = run_id or f"serve-{os.getpid()}"
+        self.clock = clock
+        self._seq = 0
+
+    @property
+    def count(self) -> int:
+        """Records journaled by this recorder."""
+        return self._seq
+
+    def record(self, config: Optional[Dict[str, Any]], latency_s: float, *,
+               phase: str = "decode") -> TuningRecord:
+        """One measured step. ``config=None`` (built-in defaults, nothing
+        resolved) is still journaled — telemetry — but carries no config and
+        so never transfers."""
+        idx = (self.space.index_of(config) if config is not None else None)
+        key = (str(int(idx)) if idx is not None else
+               "cfg:" + json.dumps(config, sort_keys=True, default=str)
+               if config is not None else f"default:{self._seq}")
+        rec = TuningRecord(
+            fp=self.fp.digest, run=self.run_id, seq=self._seq, key=key,
+            idx=None if idx is None else int(idx), value=float(latency_s),
+            config=None if config is None else dict(config),
+            dur=float(latency_s), t=float(self.clock()),
+            meta={"phase": phase})
+        self._seq += 1
+        self.store.append(rec, fingerprint=self.fp)
+        return rec
+
+
+class DriftMonitor:
+    """Windowed divergence of observed latency from the stored prediction.
+
+    Triggers when the median of the last ``window`` observations is off the
+    roofline prediction by more than ``factor`` in either direction (slower:
+    the stored config is stale for this hardware/load; faster: the roofline
+    itself is stale and tuning is mis-ranking). Re-arms by clearing the
+    window, so one drifted regime yields one trigger, not one per step."""
+
+    def __init__(self, predicted: Optional[float] = None, *,
+                 factor: float = 1.5, window: int = 8):
+        if factor <= 1.0:
+            raise ValueError(f"drift factor must be > 1, got {factor}")
+        self.predicted = predicted
+        self.factor = factor
+        self.window = max(int(window), 1)
+        self._obs: List[float] = []
+        self.last_median: float = math.nan
+
+    def rebase(self, predicted: Optional[float]) -> None:
+        """New config deployed: new prediction, fresh window."""
+        self.predicted = predicted
+        self._obs = []
+
+    def observe(self, latency_s: float) -> bool:
+        if self.predicted is None or self.predicted <= 0:
+            return False
+        self._obs.append(float(latency_s))
+        if len(self._obs) < self.window:
+            return False
+        self._obs = self._obs[-self.window:]
+        s = sorted(self._obs)
+        mid = len(s) // 2
+        med = s[mid] if len(s) % 2 else 0.5 * (s[mid - 1] + s[mid])
+        self.last_median = med
+        ratio = med / self.predicted
+        if ratio > self.factor or ratio < 1.0 / self.factor:
+            self._obs = []
+            return True
+        return False
+
+
+@dataclass
+class ServeStats:
+    """What one ``OnlineServeLoop.run`` did, for tests and logs."""
+    steps: int = 0
+    latencies: List[float] = field(default_factory=list)
+    swaps: List[Tuple[int, Dict[str, Any], float]] = field(
+        default_factory=list)          # (global step, config, roofline value)
+    retunes_requested: int = 0
+
+
+class OnlineServeLoop:
+    """The serve-side control loop: between decode steps, poll the store and
+    atomically swap in a strictly better config (no restart — the server
+    keeps its params/cache and only re-derives its step functions); after
+    each step, write the measured latency back as prod telemetry and check
+    it against the deployed config's roofline prediction, enqueuing a
+    ``RetuneRequest`` on drift.
+
+    ``server`` is the data plane: ``decode_step() -> latency_s`` and
+    ``apply_config(config_dict)``. The real one lives in
+    ``repro.launch.serve.DecodeServer``; the simulation harness substitutes
+    an in-process stub driven by a virtual clock.
+    """
+
+    def __init__(self, server, source: Optional[HotConfigSource] = None, *,
+                 recorder: Optional[ProdRecorder] = None,
+                 monitor: Optional[DriftMonitor] = None,
+                 retune_queue=None, cell_key: str = "",
+                 poll_every: int = 1, clock=time.time,
+                 first_step_warmup: bool = False):
+        self.server = server
+        self.source = source
+        self.recorder = recorder
+        self.monitor = monitor
+        self.retune_queue = retune_queue
+        self.cell_key = cell_key
+        self.poll_every = max(int(poll_every), 1)
+        self.clock = clock
+        self.config: Optional[Dict[str, Any]] = (
+            source.current[0] if source is not None and source.current
+            else None)
+        self.step = 0          # global decode-step counter across run() calls
+        # first step after a swap pays the re-jit; a real (jit-compiled)
+        # data plane also pays it on its very first step, before any swap —
+        # the launcher passes first_step_warmup=True for that
+        self._warmup = bool(first_step_warmup)
+
+    def _maybe_swap(self, stats: ServeStats) -> None:
+        hit = self.source.refresh() if self.source is not None else None
+        if hit is None:
+            # the deployed config can be re-ranked in place (an exact record
+            # landing for it, or a better measurement): no swap, but the
+            # drift monitor must judge against the CURRENT roofline
+            if (self.monitor is not None and self.source is not None
+                    and self.source.current is not None
+                    and self.monitor.predicted != self.source.current[1]):
+                self.monitor.rebase(self.source.current[1])
+            return
+        cfg, value = hit
+        self.server.apply_config(cfg)
+        self.config = dict(cfg)
+        self._warmup = True
+        if self.monitor is not None:
+            self.monitor.rebase(value)
+        stats.swaps.append((self.step, dict(cfg), value))
+
+    def run(self, steps: int) -> ServeStats:
+        stats = ServeStats()
+        for _ in range(int(steps)):
+            if self.step % self.poll_every == 0:
+                self._maybe_swap(stats)
+            dt = self.server.decode_step()
+            stats.steps += 1
+            stats.latencies.append(dt)
+            if self._warmup:
+                # the first post-swap step includes the re-jit: neither
+                # telemetry the warm start should learn from nor a latency
+                # the drift monitor should judge the new config by
+                self._warmup = False
+                self.step += 1
+                continue
+            if self.recorder is not None:
+                self.recorder.record(self.config, dt, phase="decode")
+            if self.monitor is not None and self.monitor.observe(dt):
+                if self.retune_queue is not None:
+                    from repro.core.engine import RetuneRequest
+                    accepted = self.retune_queue.submit(RetuneRequest(
+                        key=self.cell_key or (
+                            self.source.objective_id if self.source else ""),
+                        objective=(self.source.objective_id
+                                   if self.source else ""),
+                        observed=self.monitor.last_median,
+                        predicted=self.monitor.predicted or math.nan,
+                        t=float(self.clock())))
+                    stats.retunes_requested += int(accepted)
+            self.step += 1
+        return stats

@@ -1,0 +1,169 @@
+"""Deterministic full-loop simulation harness (DESIGN.md §12).
+
+Drives the complete store → serve → store cycle in-process and reproducibly:
+a ``VirtualClock`` replaces wall time, a ``StubDecodeServer`` replaces the
+jax data plane (its per-step latency is the cell's roofline surface
+evaluated at the deployed config, plus deterministic wobble and an
+injectable drift multiplier), and scripted store mutations replace real
+tuner/fleet writers. The control plane under test is the REAL one — store
+files on disk, ``StoreWatcher``/``HotConfigSource``/``ProdRecorder``/
+``DriftMonitor``/``OnlineServeLoop`` from ``repro.store.watch`` and
+``RetuneQueue``/``run_retune`` from ``repro.core.engine`` — nothing is
+mocked on that side.
+
+This file is the template for end-to-end loop tests: build a ``LoopSim`` on
+a tmp store, script appends/serves/drift, assert on ``ServeStats`` and on
+the store contents. No sleeps, no subprocesses, no jax.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.objectives import SimulatedObjective
+from repro.core.tuning_targets import sharding_space
+from repro.store import (DriftMonitor, HotConfigSource, OnlineServeLoop,
+                         ProdRecorder, SpaceFingerprint, TuningRecord,
+                         TuningRecordStore, cell_objective)
+
+ARCH, SHAPE, MESH = "internlm2-1.8b", "decode_32k", "single"
+
+
+class VirtualClock:
+    """Monotonic sim time; advanced only by simulated work."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+
+def cell_surface(space, seed: int = 0) -> np.ndarray:
+    """Deterministic per-config roofline step time (seconds) for a cell: a
+    smooth bowl over the normalized space with mild oscillation, the same
+    shape the toy tuning tests use — so the scripted tuner, the prod
+    telemetry, and a re-tune objective all see one consistent surface."""
+    x = space.X_norm.astype(np.float64)
+    c = 0.35 + 0.06 * np.arange(x.shape[1])
+    bowl = np.sum((x - c) ** 2, axis=1)
+    osc = 0.1 * np.sin(5 * x[:, 0]) * np.cos(3 * x[:, 1])
+    rng = np.random.default_rng(seed)
+    jitter = 0.02 * rng.standard_normal(space.size)   # fixed per-config detail
+    return 0.010 + 0.020 * (bowl + 0.2 * osc + 0.1 * jitter - (bowl.min()))
+
+
+class StubDecodeServer:
+    """In-process 'server': latency of one decode step is the surface value
+    of the deployed config (defaults are deliberately slow), times a drift
+    multiplier the test scripts, plus deterministic per-step wobble."""
+
+    def __init__(self, latency_of, clock: VirtualClock, *,
+                 default_latency: float, wobble: float = 0.01):
+        self.latency_of = latency_of
+        self.clock = clock
+        self.default_latency = float(default_latency)
+        self.wobble = float(wobble)
+        self.drift_scale = 1.0
+        self.config = None
+        self.applied = []            # every hot-swap, in order
+        self.restarts = 0            # never incremented: swaps don't restart
+        self.steps = 0
+
+    def apply_config(self, cfg) -> None:
+        self.config = dict(cfg)
+        self.applied.append(dict(cfg))
+
+    def decode_step(self) -> float:
+        base = (self.latency_of(self.config) if self.config is not None
+                else self.default_latency)
+        w = 1.0 + self.wobble * (((self.steps * 2654435761) % 7) - 3) / 3.0
+        dt = base * w * self.drift_scale
+        self.steps += 1
+        self.clock.advance(dt)
+        return dt
+
+
+class LoopSim:
+    """One serving cell closed-loop world on a real on-disk store."""
+
+    def __init__(self, store_path: str, *, arch: str = ARCH,
+                 shape: str = SHAPE, mesh: str = MESH,
+                 drift_factor: float = 1.5, drift_window: int = 4,
+                 poll_every: int = 1, surface_seed: int = 0):
+        self.clock = VirtualClock()
+        self.space = sharding_space(arch, shape)
+        self.times = cell_surface(self.space, seed=surface_seed)
+        self.objective_id = cell_objective(arch, shape, mesh)
+        self.fp = SpaceFingerprint.of(self.space, objective=self.objective_id)
+        self.store_path = store_path
+        self.store = TuningRecordStore(store_path)
+        self.server = StubDecodeServer(
+            self._latency_of, self.clock,
+            default_latency=float(np.max(self.times)) * 1.5)
+        self.source = HotConfigSource(store_path, arch, shape, mesh)
+        self.recorder = ProdRecorder(self.store, arch, shape, mesh,
+                                     run_id="sim-serve", clock=self.clock)
+        self.monitor = DriftMonitor(None, factor=drift_factor,
+                                    window=drift_window)
+        from repro.core.engine import RetuneQueue
+        self.queue = RetuneQueue()
+        self.loop = OnlineServeLoop(
+            self.server, self.source, recorder=self.recorder,
+            monitor=self.monitor, retune_queue=self.queue,
+            cell_key=self.objective_id, poll_every=poll_every,
+            clock=self.clock)
+        self._tuner_seq = 0
+
+    def _latency_of(self, config) -> float:
+        idx = self.space.index_of(config)
+        if idx is None:
+            return self.server.default_latency
+        return float(self.times[idx])
+
+    # -- scripted store mutations ------------------------------------------
+    def append_tuning_record(self, idx: int, run: str = "sim-tune") -> None:
+        """A tuner (elsewhere in the fleet) lands one result for this cell."""
+        self.store.append(TuningRecord(
+            fp=self.fp.digest, run=run, seq=self._tuner_seq,
+            key=str(int(idx)), idx=int(idx), value=float(self.times[idx]),
+            config=self.space.config(int(idx)), t=self.clock()),
+            fingerprint=self.fp)
+        self._tuner_seq += 1
+
+    def ranked_indices(self) -> np.ndarray:
+        """Config indices sorted best-first on the true surface."""
+        return np.argsort(self.times, kind="stable")
+
+    # -- the loop -----------------------------------------------------------
+    def serve(self, steps: int):
+        return self.loop.run(steps)
+
+    def objective(self) -> SimulatedObjective:
+        """The cell's tuning objective (what a re-tune run evaluates) — the
+        same surface serving latencies are drawn from."""
+        return SimulatedObjective(self.space, self.times,
+                                  name=self.objective_id)
+
+
+def prod_only_store(src_path: str, dst_path: str) -> TuningRecordStore:
+    """Copy only ``context="prod"`` records into a fresh store — isolates
+    "warm re-tune seeded purely from serving telemetry" measurements."""
+    src = TuningRecordStore(src_path)
+    dst = TuningRecordStore(dst_path)
+    for digest, desc in src.fingerprints().items():
+        if desc.context != "prod":
+            continue
+        for rec in src.records(fp=digest):
+            dst.append(rec, fingerprint=desc)
+    dst.close()
+    return TuningRecordStore(dst_path)
+
+
+def evals_to_reach(trace: np.ndarray, value: float):
+    """1-based unique-eval count at which best-so-far first reaches value
+    (same metric as benchmarks/warm_start.py)."""
+    hit = np.flatnonzero(np.asarray(trace) <= value + 1e-12)
+    return int(hit[0]) + 1 if hit.size else None

@@ -1,0 +1,152 @@
+"""Serving-side config resolution (repro.launch.serve + repro.store.resolve).
+
+Previously exercised only by hand-running the launcher; pins (ISSUE 4):
+store hit, miss-with-defaults, cross-digest fallback (minimum over ALL
+compatible fingerprints), ``apply_sharding_config`` flash-threshold mapping,
+and the online path's startup resolution agreeing with the offline one.
+"""
+import numpy as np
+import pytest
+
+from repro.core.tuning_targets import sharding_space
+from repro.parallel.sharding import ParallelConfig
+from repro.store import (HotConfigSource, SpaceFingerprint, TuningRecord,
+                         TuningRecordStore, apply_sharding_config,
+                         best_sharding_config, cell_objective)
+
+ARCH, SHAPE = "internlm2-1.8b", "decode_32k"
+
+
+def _seed(store, space, fp, triples, run="tune"):
+    for seq, (i, v) in enumerate(triples):
+        store.append(TuningRecord(fp=fp.digest, run=run, seq=seq, key=str(i),
+                                  idx=i, value=v, config=space.config(i)),
+                     fingerprint=fp)
+
+
+def _default_pcfg() -> ParallelConfig:
+    return ParallelConfig(flash_threshold=1 << 30, logits_chunk=0)
+
+
+def test_resolution_store_hit(tmp_path):
+    space = sharding_space(ARCH, SHAPE)
+    fp = SpaceFingerprint.of(space, objective=cell_objective(ARCH, SHAPE))
+    store = TuningRecordStore(str(tmp_path / "store"))
+    _seed(store, space, fp, [(3, 1.25), (17, 0.75), (40, 2.0)])
+    store.close()
+
+    from repro.launch.serve import resolve_pcfg
+    pcfg = resolve_pcfg(_default_pcfg(), str(tmp_path / "store"), ARCH, SHAPE)
+    best = space.config(17)
+    assert pcfg.remat == best["remat"]
+    assert pcfg.attn_q_chunks == best["attn_q_chunks"]
+    assert pcfg.logits_chunk == best["logits_chunk"]
+    assert pcfg.attn_block_kv == best["attn_block_kv"]
+
+
+def test_resolution_miss_keeps_defaults(tmp_path):
+    from repro.launch.serve import resolve_pcfg
+    base = _default_pcfg()
+    # no store file at all
+    assert resolve_pcfg(base, str(tmp_path / "nope"), ARCH, SHAPE) is base
+    # store exists but has records only for another cell
+    space = sharding_space(ARCH, "train_4k")
+    fp = SpaceFingerprint.of(space,
+                             objective=cell_objective(ARCH, "train_4k"))
+    store = TuningRecordStore(str(tmp_path / "store"))
+    _seed(store, space, fp, [(5, 0.5)])
+    store.close()
+    out = resolve_pcfg(base, str(tmp_path / "store"), ARCH, SHAPE)
+    assert out is base, "foreign-cell records must not configure this server"
+
+
+def test_resolution_cross_digest_fallback_takes_min(tmp_path):
+    """No exact-fingerprint record: resolution falls back to compatible
+    fingerprints with the same cell objective — and must take the MINIMUM
+    across all of them, not the first registered (regression: the old loop
+    returned on the first hit)."""
+    obj = cell_objective(ARCH, SHAPE)
+    narrow = sharding_space(ARCH, SHAPE)
+    # same cell, other digest: a grid-subset trim (take() is in place, so
+    # trim a fresh instance, not `narrow`)
+    trimmed = sharding_space(ARCH, SHAPE).take(
+        np.arange(0, narrow.size, 2))
+    wide = sharding_space(ARCH, SHAPE, wide=True)
+    fp_trim = SpaceFingerprint.of(trimmed, objective=obj)
+    fp_wide = SpaceFingerprint.of(wide, objective=obj)
+    assert fp_trim.digest != fp_wide.digest
+
+    store = TuningRecordStore(str(tmp_path / "store"))
+    # registered FIRST, worse best — the old code stopped here
+    _seed(store, trimmed, fp_trim, [(4, 0.9)], run="trim")
+    _seed(store, wide, fp_wide, [(11, 0.5), (23, 1.1)], run="wide")
+    store.close()
+
+    hit = best_sharding_config(str(tmp_path / "store"), ARCH, SHAPE)
+    assert hit is not None
+    cfg, val = hit
+    assert val == 0.5 and cfg == wide.config(11)
+
+
+def test_apply_sharding_config_flash_threshold_mapping():
+    base = _default_pcfg()
+    on = apply_sharding_config(base, {"flash": 1, "attn_block_kv": 512})
+    assert on.flash_threshold == 0 and on.attn_block_kv == 512
+    off = apply_sharding_config(base, {"flash": 0})
+    assert off.flash_threshold == 1 << 30
+    # knobs absent from the record keep their defaults; unknown keys ignored
+    partial = apply_sharding_config(base, {"remat": "dots", "experts_rule":
+                                           "model+data"})
+    assert partial.remat == "dots"
+    assert partial.logits_chunk == base.logits_chunk
+    assert partial.microbatches == base.microbatches
+
+
+def test_exact_record_overtakes_deployed_fallback(tmp_path):
+    """Hot reload must converge with restart resolution: a server running on
+    a cross-digest fallback swaps to a landing exact-fingerprint record even
+    at a higher roofline value (exact is the cell's own measured problem),
+    because that is exactly what a restarting server would deploy."""
+    wide = sharding_space(ARCH, SHAPE, wide=True)
+    fp_wide = SpaceFingerprint.of(wide, objective=cell_objective(ARCH, SHAPE))
+    store = TuningRecordStore(str(tmp_path / "store"))
+    _seed(store, wide, fp_wide, [(11, 0.5)], run="wide")
+
+    source = HotConfigSource(str(tmp_path / "store"), ARCH, SHAPE)
+    first = source.refresh()
+    assert first == (wide.config(11), 0.5)
+
+    narrow = sharding_space(ARCH, SHAPE)
+    fp = SpaceFingerprint.of(narrow, objective=cell_objective(ARCH, SHAPE))
+    _seed(store, narrow, fp, [(7, 0.8)], run="tune")
+    store.close()
+    swapped = source.refresh()
+    assert swapped == (narrow.config(7), 0.8)
+    offline = best_sharding_config(str(tmp_path / "store"), ARCH, SHAPE)
+    assert offline is not None and swapped[0] == offline[0]
+    # a worse cross record never displaces a deployed exact one
+    store = TuningRecordStore(str(tmp_path / "store"))
+    _seed(store, wide, fp_wide, [(3, 0.4)], run="wide2")
+    store.close()
+    assert source.refresh() is None
+    assert source.current == (narrow.config(7), 0.8)
+
+
+def test_online_startup_resolution_matches_offline(tmp_path):
+    """HotConfigSource's first refresh IS the startup resolution: it must
+    deploy the same config best_sharding_config resolves offline."""
+    space = sharding_space(ARCH, SHAPE)
+    fp = SpaceFingerprint.of(space, objective=cell_objective(ARCH, SHAPE))
+    store = TuningRecordStore(str(tmp_path / "store"))
+    _seed(store, space, fp, [(8, 1.0), (2, 0.6), (300, 3.0)])
+    store.close()
+
+    offline = best_sharding_config(str(tmp_path / "store"), ARCH, SHAPE)
+    source = HotConfigSource(str(tmp_path / "store"), ARCH, SHAPE)
+    online = source.refresh()
+    assert offline is not None and online is not None
+    assert online[0] == offline[0] and online[1] == offline[1]
+    # cold store: both agree there is nothing
+    cold = HotConfigSource(str(tmp_path / "cold"), ARCH, SHAPE)
+    assert cold.refresh() is None
+    assert best_sharding_config(str(tmp_path / "cold"), ARCH, SHAPE) is None

@@ -311,6 +311,53 @@ def test_best_sharding_config_resolution(tmp_path):
     assert pcfg.flash_threshold == (0 if cfg["flash"] else 1 << 30)
 
 
+def test_cross_digest_fallback_is_min_over_all_compatible(tmp_path):
+    """Regression (ISSUE 4): with no exact-fingerprint record, resolution
+    used to return the FIRST compatible fingerprint's best — the loop exited
+    on the first hit — instead of the minimum across all of them."""
+    from repro.core.tuning_targets import sharding_space
+    from repro.store import cell_objective
+
+    arch, shape = "internlm2-1.8b", "decode_32k"
+    obj = cell_objective(arch, shape)
+    narrow = sharding_space(arch, shape)
+    # two compatible non-exact digests for the same cell: a trimmed subset
+    # of the narrow grid (take() is in place — trim a fresh instance) and
+    # the wide grid
+    trimmed = sharding_space(arch, shape).take(
+        np.arange(0, narrow.size, 3))
+    wide = sharding_space(arch, shape, wide=True)
+    fp_trim = SpaceFingerprint.of(trimmed, objective=obj)
+    fp_wide = SpaceFingerprint.of(wide, objective=obj)
+    assert fp_trim.digest != fp_wide.digest != SpaceFingerprint.of(
+        narrow, objective=obj).digest
+
+    store = TuningRecordStore(str(tmp_path / "store"))
+    # worse fingerprint registered FIRST: the buggy loop stopped here
+    store.append(TuningRecord(fp=fp_trim.digest, run="a", seq=0, key="4",
+                              idx=4, value=0.9, config=trimmed.config(4)),
+                 fingerprint=fp_trim)
+    store.append(TuningRecord(fp=fp_wide.digest, run="b", seq=0, key="11",
+                              idx=11, value=0.5, config=wide.config(11)),
+                 fingerprint=fp_wide)
+    store.close()
+
+    hit = best_sharding_config(str(tmp_path / "store"), arch, shape)
+    assert hit is not None
+    cfg, val = hit
+    assert val == 0.5 and cfg == wide.config(11)
+    # an exact-fingerprint record still outranks any fallback, even a better
+    # one: exact is the cell's own measured problem
+    store = TuningRecordStore(str(tmp_path / "store"))
+    fp = SpaceFingerprint.of(narrow, objective=obj)
+    store.append(TuningRecord(fp=fp.digest, run="c", seq=0, key="7", idx=7,
+                              value=0.8, config=narrow.config(7)),
+                 fingerprint=fp)
+    store.close()
+    cfg2, val2 = best_sharding_config(str(tmp_path / "store"), arch, shape)
+    assert val2 == 0.8 and cfg2 == narrow.config(7)
+
+
 def test_bare_checkpoint_never_warm_starts_and_fresh_run_overwrites(tmp_path):
     """A journal file is resume-only state: reusing the path for a fresh
     (non-resume) run replaces it — the pre-store semantics — and its records

@@ -6,6 +6,11 @@ import time
 import numpy as np
 import pytest
 
+# training-substrate tests compile jax train steps and run restart drills:
+# the nightly tier. PR CI deselects them (-m "not slow"); the tier-1 verify
+# command runs everything.
+pytestmark = pytest.mark.slow
+
 import jax
 import jax.numpy as jnp
 

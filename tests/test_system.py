@@ -11,6 +11,9 @@ import math
 import numpy as np
 import pytest
 
+# full-budget end-to-end runs: the nightly tier (PR CI runs -m "not slow")
+pytestmark = pytest.mark.slow
+
 from repro.core.metrics import mae, mdf_table
 from repro.core.runner import run_strategy
 from repro.core.spaces import make_objective

@@ -1,0 +1,186 @@
+"""Store-scaling benchmark: open time and bytes read vs record count,
+indexed (lazy) vs full-load (DESIGN.md §13, ISSUE 5 acceptance).
+
+The fleet-scale claim under measurement: opening a store and resolving ONE
+serving cell must cost O(hot set), not O(store). For each record count the
+bench builds a directory store of ``FLEET_CELLS`` fingerprints (one hot
+cell with a fixed small record count, the rest cold bulk — the shape a
+shared fleet store has), then measures, for full-load vs indexed open:
+
+  * wall time to open + resolve the hot cell (``best`` + ``records``);
+  * bytes of segment/index data read to do it (``store.bytes_read``);
+  * and asserts the two paths return byte-identical results.
+
+The committed curve lives in ``results/bench/store_scaling.json``; the
+acceptance bar is >=10x less data read and >=5x faster open at the top of
+the curve. ``--smoke`` (CI) runs a small count and checks the equivalence +
+ratio machinery; the full curve (nightly) climbs to 10^6 records.
+
+  PYTHONPATH=src python -m benchmarks.store_bench [--smoke] [--records N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+from benchmarks.common import emit, save_json
+from repro.core.searchspace import Param, SearchSpace
+from repro.store import (SpaceFingerprint, TuningRecordStore, build_index,
+                         write_index)
+
+FLEET_CELLS = 64          # distinct fingerprints (serving cells) per store
+HOT_RECORDS = 64          # records under the one cell a server resolves
+SEGMENT_RECORDS = 200_000  # writer rollover cadence for the bulk
+RUN_BLOCK = 512           # contiguous records per tuning run (how real
+                          # journals land: one run streams one fingerprint)
+
+SPACE = SearchSpace([Param("a", (0, 1, 2, 3)), Param("b", (0, 1, 2)),
+                     Param("c", (0, 1))], name="bench")
+
+
+def _fps(n: int):
+    return [SpaceFingerprint.of(SPACE, objective=f"bench@cell{i}")
+            for i in range(n)]
+
+
+def build_store(path: str, n_records: int):
+    """Write a fleet-shaped store of ``n_records`` observations: the hot
+    cell's HOT_RECORDS plus cold bulk spread over the other cells, rolled
+    into a new segment every SEGMENT_RECORDS. Lines are written through a
+    buffered handle (the per-record-flush appender would make store
+    CONSTRUCTION the bottleneck, and construction is not what's measured)
+    in the exact on-disk format ``TuningRecordStore.append`` produces."""
+    fps = _fps(FLEET_CELLS)
+    hot = fps[0]
+    os.makedirs(path, exist_ok=True)
+    n_bulk = max(n_records - HOT_RECORDS, 0)
+    written = 0
+    seg_idx = 0
+    f = None
+    fp_written: set = set()
+    try:
+        for i in range(n_records):
+            if f is None or written % SEGMENT_RECORDS == 0:
+                if f is not None:
+                    f.close()
+                f = open(os.path.join(path, f"segment-1-{seg_idx}.jsonl"),
+                         "w")
+                seg_idx += 1
+                fp_written = set()
+            if i < n_bulk:
+                fp = fps[1 + (i // RUN_BLOCK) % (FLEET_CELLS - 1)]
+                seq, value = i, 1.0 + (i % 977) * 1e-3
+            else:
+                fp = hot
+                seq = i - n_bulk
+                value = 0.5 + ((seq * 7919) % HOT_RECORDS) * 1e-3
+            if fp.digest not in fp_written:
+                f.write(json.dumps(fp.to_json()) + "\n")
+                fp_written.add(fp.digest)
+            idx = seq % SPACE.size
+            f.write(json.dumps({
+                "kind": "obs", "fp": fp.digest, "run": f"w{seg_idx}",
+                "seq": seq, "key": str(seq), "idx": idx, "value": value,
+                "af": None, "config": SPACE.config(idx),
+                "t": float(i)}) + "\n")
+            written += 1
+    finally:
+        if f is not None:
+            f.close()
+    return hot
+
+
+def _resolve(store, hot) -> tuple:
+    best = store.best(hot.digest)
+    recs = store.records(fp=hot.digest)
+    return ([r.to_json() for r in recs],
+            None if best is None else best.to_json())
+
+
+def bench_one(n_records: int) -> dict:
+    d = tempfile.mkdtemp(prefix=f"storebench-{n_records}-")
+    path = os.path.join(d, "store")
+    try:
+        t0 = time.perf_counter()
+        hot = build_store(path, n_records)
+        t_build = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        write_index(path, build_index(path))
+        t_index = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        full = TuningRecordStore(path)
+        full_view = _resolve(full, hot)
+        t_full = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        lazy = TuningRecordStore(path, lazy=True)
+        lazy_view = _resolve(lazy, hot)
+        t_lazy = time.perf_counter() - t0
+
+        assert lazy_view == full_view, \
+            "lazy resolution must be byte-identical to full load"
+        assert len(lazy) == len(full) == n_records
+        seg_bytes = sum(os.path.getsize(os.path.join(path, f))
+                        for f in os.listdir(path) if f.endswith(".jsonl"))
+        return {"records": n_records, "segment_bytes": seg_bytes,
+                "build_s": t_build, "index_build_s": t_index,
+                "full": {"open_resolve_s": t_full,
+                         "bytes_read": full.bytes_read},
+                "indexed": {"open_resolve_s": t_lazy,
+                            "bytes_read": lazy.bytes_read},
+                "speedup": t_full / t_lazy,
+                "read_reduction": full.bytes_read / max(lazy.bytes_read, 1)}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def main() -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: small store, equivalence + ratio sanity only")
+    ap.add_argument("--records", type=int, default=None,
+                    help="single run at this record count")
+    args = ap.parse_args()
+    if args.records is not None:
+        counts = [args.records]
+    elif args.smoke:
+        counts = [20_000]
+    else:
+        counts = [10_000, 100_000, 1_000_000]
+
+    rows = []
+    for n in counts:
+        row = bench_one(n)
+        rows.append(row)
+        emit(f"store_open_full_n{n}",
+             row["full"]["open_resolve_s"] * 1e6,
+             f"{row['full']['bytes_read']:,} B read")
+        emit(f"store_open_indexed_n{n}",
+             row["indexed"]["open_resolve_s"] * 1e6,
+             f"{row['indexed']['bytes_read']:,} B read; "
+             f"{row['speedup']:.1f}x faster, "
+             f"{row['read_reduction']:.0f}x less data")
+    top = rows[-1]
+    if args.smoke:
+        # the asymptotic bars are pinned at 10^6 nightly; the smoke run
+        # only proves the machinery and a sane direction at small n
+        assert top["read_reduction"] > 2 and top["speedup"] > 1, top
+    else:
+        assert top["read_reduction"] >= 10, \
+            f"acceptance: >=10x less data read, got {top['read_reduction']:.1f}"
+        assert top["speedup"] >= 5, \
+            f"acceptance: >=5x faster open, got {top['speedup']:.1f}"
+        save_json("store_scaling", {"cells": FLEET_CELLS,
+                                    "hot_records": HOT_RECORDS,
+                                    "rows": rows})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    main()

@@ -67,11 +67,16 @@ class RetuneRequest:
 
 
 class RetuneQueue:
-    """Thread-safe intake for drift-triggered re-tune requests.
+    """Thread-safe IN-PROCESS intake for drift-triggered re-tune requests.
 
     One pending request per cell: a fleet of servers all observing the same
     drifted cell collapses to a single re-tune instead of a stampede. The
-    key re-arms once the request is popped (taken by a tuner)."""
+    key re-arms once the request is popped (taken by a tuner).
+
+    This queue dies with its process; production serving uses the durable
+    store-backed ``repro.store.queue.DurableRetuneQueue`` (same ``submit``
+    interface), whose requests survive crashes and are claimed by a
+    separate ``repro.launch.retune`` daemon."""
 
     def __init__(self):
         self._lock = threading.Lock()
@@ -175,9 +180,12 @@ class ParallelTuningEngine:
         self.backend = backend
         self.max_total_calls = max_total_calls
         self.checkpoint_path = checkpoint_path
-        # shared record store (repro.store): journal persistence + transfer
-        self.store = (TuningRecordStore(store) if isinstance(store, str)
-                      else store)
+        # shared record store (repro.store): journal persistence + transfer.
+        # A path opens through the sidecar segment index (lazy=True): the
+        # engine touches only this run's fingerprint and its warm-start
+        # matches, so opening must stay O(hot set) on fleet-scale stores.
+        self.store = (TuningRecordStore(store, lazy=True)
+                      if isinstance(store, str) else store)
         self.run_id = run_id
         self.context = context
         self.warm_start = warm_start

@@ -169,10 +169,10 @@ class TuningRun:
         store = self._open_store()
         if store is None:
             return 0
-        recs = store.records(run=self.run_id)
         if store.single_file:
             # a journal file IS one run: any foreign fingerprint in it means
             # the space/objective changed under the checkpoint path
+            recs = store.records(run=self.run_id)
             bad = [r for r in recs if r.fp != self.fingerprint.digest]
             if bad:
                 raise ValueError(
@@ -182,8 +182,9 @@ class TuningRun:
                     " — refusing to resume across space/objective changes")
         else:
             # shared store: the same run tag legitimately recurs under other
-            # fingerprints (same strategy/seed on another kernel)
-            recs = [r for r in recs if r.fp == self.fingerprint.digest]
+            # fingerprints (same strategy/seed on another kernel) — and
+            # querying by digest keeps a lazy (indexed) open O(hot set)
+            recs = store.records(fp=self.fingerprint.digest, run=self.run_id)
         # a twice-resumed run spans segments whose filename order need not
         # follow write order (new pid sorts before old) — seq is the truth
         recs.sort(key=lambda r: r.seq)

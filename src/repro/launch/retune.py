@@ -1,0 +1,147 @@
+"""Retune daemon: service durable drift requests from the shared store.
+
+    PYTHONPATH=src python -m repro.launch.retune --store results/tune_store \
+        [--once] [--budget 40] [--strategy ei] [--poll-every 30]
+
+The other half of the serve-side control plane (DESIGN.md §13): servers
+running ``repro.launch.serve --online`` enqueue ``kind="retune"`` control
+records into the store when observed latency drifts off the stored roofline
+— this process tails the same store, claims each open request exactly once
+(``DurableRetuneQueue.claim``), and services it with a warm-started tuning
+run (``repro.core.engine.run_retune``) journaled back into the store, which
+the serving fleet then hot-reloads. Submitter, daemon, and servers share
+nothing but the store path: a request survives the death of the process
+that raised it, and a daemon crash mid-run re-arms after the claim TTL.
+
+A cell key ``dryrun[arch×shape×mesh]`` maps back to its tuning problem by
+parsing the id the resolver minted (``repro.store.resolve.cell_objective``);
+tests inject ``objective_for`` to service simulated cells instead.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import time
+from typing import Callable, Optional
+
+from repro.core.engine import RetuneRequest, run_retune
+from repro.store.queue import DurableRetuneQueue
+from repro.store.records import TuningRecordStore
+
+_CELL_RE = re.compile(r"^dryrun\[(?P<arch>.+?)×(?P<shape>.+?)×(?P<mesh>.+?)\]$")
+
+
+def dryrun_objective_for(key: str):
+    """The real tuning objective of a serving cell key — a dry-run compile
+    objective over the cell's sharding space. Raises on keys this daemon
+    does not know how to tune (a deliberate loud failure: an unserviceable
+    request should page, not rot in the queue)."""
+    m = _CELL_RE.match(key)
+    if m is None:
+        raise ValueError(f"unrecognized retune cell key {key!r} — expected "
+                         "a dryrun[arch×shape×mesh] tuning objective id")
+    from repro.core.tuning_targets import DryRunObjective
+    return DryRunObjective(m.group("arch"), m.group("shape"),
+                           m.group("mesh"))
+
+
+class RetuneDaemon:
+    """Claim-and-service loop over a store's durable retune queue."""
+
+    def __init__(self, store_path: str, *,
+                 objective_for: Callable = dryrun_objective_for,
+                 strategy_factory: Optional[Callable] = None,
+                 budget: int = 40, seed: int = 0,
+                 worker: Optional[str] = None, claim_ttl: float = 3600.0,
+                 clock=time.time, verbose: bool = False):
+        if strategy_factory is None:
+            from repro.core.strategies import make_strategy
+            strategy_factory = lambda: make_strategy("ei")  # noqa: E731
+        self.store_path = store_path
+        self.objective_for = objective_for
+        self.strategy_factory = strategy_factory
+        self.budget = int(budget)
+        self.seed = int(seed)
+        self.clock = clock
+        self.verbose = verbose
+        # ONE store instance for everything this process appends (queue
+        # claims/dones AND the retune runs' journals): compaction judges
+        # "sealed" per pid, so a second live append segment would be at
+        # risk of being folded under us. Lazy: O(hot set) open, and
+        # re-snapshotted per serviced request so warm starts see the
+        # latest telemetry.
+        self.store = TuningRecordStore(store_path, lazy=True)
+        self.queue = DurableRetuneQueue(store_path, worker=worker,
+                                        claim_ttl=claim_ttl, clock=clock,
+                                        appender=self.store)
+        self.serviced = 0
+
+    def step(self):
+        """Claim and service at most one request; returns the TuneResult or
+        None when nothing was claimable."""
+        ticket = self.queue.claim()
+        if ticket is None:
+            return None
+        if self.verbose:
+            print(f"[retune] claimed {ticket.id}: observed "
+                  f"{ticket.observed * 1e3:.1f} ms vs "
+                  f"{ticket.predicted * 1e3:.1f} ms predicted")
+        req = RetuneRequest(key=ticket.key, objective=ticket.objective,
+                            observed=ticket.observed,
+                            predicted=ticket.predicted,
+                            reason=ticket.reason, t=ticket.t)
+        self.store.refresh()           # warm-start from the latest records
+        result = run_retune(req, self.objective_for(ticket.key),
+                            self.strategy_factory(),
+                            store=self.store, budget=self.budget,
+                            seed=self.seed)
+        self.queue.done(ticket)
+        self.serviced += 1
+        if self.verbose:
+            print(f"[retune] serviced {ticket.key}: best "
+                  f"{result.best_value:.4g} in {result.unique_evals} "
+                  "unique evals — journaled to the store")
+        return result
+
+    def run(self, *, poll_every_s: float = 30.0,
+            max_requests: Optional[int] = None) -> int:
+        """Service requests until ``max_requests`` (None = forever)."""
+        while max_requests is None or self.serviced < max_requests:
+            if self.step() is None:
+                if max_requests is not None:
+                    break
+                time.sleep(poll_every_s)
+        return self.serviced
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--store", required=True,
+                    help="shared tuning-record store (directory) holding the "
+                         "durable retune queue")
+    ap.add_argument("--budget", type=int, default=40,
+                    help="unique-evaluation budget per serviced request")
+    ap.add_argument("--strategy", default="ei")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--once", action="store_true",
+                    help="drain the currently open requests and exit")
+    ap.add_argument("--poll-every", type=float, default=30.0,
+                    help="seconds between queue polls when idle")
+    ap.add_argument("--claim-ttl", type=float, default=3600.0,
+                    help="seconds before an unfinished claim re-arms")
+    args = ap.parse_args()
+    from repro.core.strategies import make_strategy
+    daemon = RetuneDaemon(args.store,
+                          strategy_factory=lambda: make_strategy(
+                              args.strategy),
+                          budget=args.budget, seed=args.seed,
+                          claim_ttl=args.claim_ttl, verbose=True)
+    if args.once:
+        n = daemon.run(max_requests=len(daemon.queue))
+        print(f"[retune] drained: {n} request(s) serviced")
+    else:
+        daemon.run(poll_every_s=args.poll_every)
+
+
+if __name__ == "__main__":
+    main()

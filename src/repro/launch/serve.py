@@ -12,9 +12,12 @@ tuning run's work. No record -> defaults, loudly.
 store between decode steps and atomically swaps in a strictly better config
 when one lands (no restart — params and KV cache survive, only the step
 functions are re-derived), writes measured per-step latencies back as
-``context="prod"`` records that warm-start future tuning runs, and flags a
-re-tune when observed latency drifts off the stored roofline prediction by
-``--drift-factor``.
+``context="prod"`` records that warm-start future tuning runs, and submits
+a durable re-tune request into the store when observed latency drifts off
+the stored roofline prediction by ``--drift-factor`` (statistic selected by
+``--drift-stat``) — serviced by a separate ``repro.launch.retune`` daemon
+even after this server dies. ``--swap-margin`` adds hot-reload hysteresis:
+improvements smaller than the re-jit cost are not worth a swap.
 """
 from __future__ import annotations
 
@@ -148,8 +151,16 @@ def main() -> None:
                          "reload), write prod-latency records back, flag "
                          "drift re-tunes (requires --store)")
     ap.add_argument("--drift-factor", type=float, default=1.5,
-                    help="re-tune when median prod latency is off the "
+                    help="re-tune when windowed prod latency is off the "
                          "stored roofline by this factor either way")
+    ap.add_argument("--drift-stat", default="median",
+                    choices=["median", "p50", "p99", "mean"],
+                    help="window statistic the drift alarm keys off (p99 "
+                         "tracks the tail users feel)")
+    ap.add_argument("--swap-margin", type=float, default=0.0,
+                    help="hot-reload hysteresis: a same-tier better record "
+                         "must improve the roofline step time by MORE than "
+                         "this many seconds to be worth the re-jit")
     ap.add_argument("--poll-every", type=int, default=4,
                     help="decode steps between store polls in --online mode")
     args = ap.parse_args()
@@ -162,7 +173,8 @@ def main() -> None:
     if args.online:
         # one code path for startup resolution AND hot reload: the first
         # refresh replays the store; later refreshes see only new records
-        source = HotConfigSource(args.store, args.arch, args.tuned_shape)
+        source = HotConfigSource(args.store, args.arch, args.tuned_shape,
+                                 swap_margin=args.swap_margin)
         hit = source.refresh()
         if hit is None:
             print(f"[serve] no tuning record for ({args.arch}, "
@@ -184,15 +196,20 @@ def main() -> None:
           f"{dt_prefill*1e3:.0f} ms, logits {server.logits_shape}")
 
     if args.online:
-        from repro.core.engine import RetuneQueue
+        from repro.store.queue import DurableRetuneQueue
         recorder = ProdRecorder(args.store, args.arch, args.tuned_shape)
         # prefill latency is telemetry, not a decode-step observation: it
         # includes the prefill jit compile and is in different units than
         # the tuned step time — journaled configless so it never transfers
         recorder.record(None, dt_prefill, phase="prefill")
         monitor = DriftMonitor(source.current[1] if source.current else None,
-                               factor=args.drift_factor)
-        queue = RetuneQueue()
+                               factor=args.drift_factor,
+                               stat=args.drift_stat)
+        # durable: a drift request survives this server's death and is
+        # claimed by a separate `python -m repro.launch.retune` daemon.
+        # The queue appends through the recorder's store handle — one live
+        # segment per pid, the shape compaction's "sealed" rule assumes
+        queue = DurableRetuneQueue(args.store, appender=recorder.store)
         loop = OnlineServeLoop(server, source, recorder=recorder,
                                monitor=monitor, retune_queue=queue,
                                cell_key=source.objective_id,
@@ -208,12 +225,12 @@ def main() -> None:
                   f"roofline {cfg_new}")
         print(f"[serve] online: {recorder.count} prod records, "
               f"{len(stats.swaps)} hot reloads, "
-              f"{stats.retunes_requested} re-tune requests pending")
-        req = queue.pop()
-        if req is not None:
-            print(f"[serve] drift: observed {req.observed*1e3:.1f} ms/step "
-                  f"vs {req.predicted*1e3:.1f} ms predicted — re-tune "
-                  f"{req.key} requested")
+              f"{stats.retunes_requested} re-tune requests submitted")
+        for tk in queue.open_tickets():
+            print(f"[serve] drift: observed {tk.observed*1e3:.1f} ms/step "
+                  f"vs {tk.predicted*1e3:.1f} ms predicted — durable "
+                  f"re-tune request {tk.id} open (service with "
+                  f"`python -m repro.launch.retune --store {args.store}`)")
     else:
         t0 = time.time()
         for _ in range(args.decode_steps):

@@ -3,7 +3,9 @@
 The observation/results subsystem: every layer produces into and consumes
 from one append-only record store keyed by search-space fingerprints —
 engine journals (checkpoint/resume), benchmark matrices, golden traces,
-dry-run compile tunings, and the serve-time best-config lookup.
+dry-run compile tunings, and the serve-time best-config lookup. §13 adds
+the fleet-scale pieces: the sidecar segment index behind ``lazy=True``
+opens, segment compaction/GC, and the durable store-backed retune queue.
 """
 from repro.store.records import (SpaceFingerprint, TuningRecord,
                                  TuningRecordStore)
@@ -14,11 +16,18 @@ from repro.store.resolve import (apply_sharding_config, best_sharding_config,
                                  cell_objective)
 from repro.store.watch import (DriftMonitor, HotConfigSource, OnlineServeLoop,
                                ProdRecorder, ServeStats, StoreWatcher,
-                               prod_objective)
+                               latency_summary, prod_objective)
+from repro.store.index import (StoreIndex, build_index, index_path,
+                               load_index, write_index)
+from repro.store.compact import CompactionStats, compact_store
+from repro.store.queue import DurableRetuneQueue, RetuneTicket
 
 __all__ = ["SpaceFingerprint", "TuningRecord", "TuningRecordStore",
            "warm_matches", "ingest_golden", "is_legacy_checkpoint",
            "migrate_checkpoint", "apply_sharding_config",
            "best_sharding_config", "cell_objective", "prod_objective",
            "StoreWatcher", "HotConfigSource", "ProdRecorder", "DriftMonitor",
-           "OnlineServeLoop", "ServeStats"]
+           "OnlineServeLoop", "ServeStats", "latency_summary",
+           "StoreIndex", "build_index", "index_path", "load_index",
+           "write_index", "CompactionStats", "compact_store",
+           "DurableRetuneQueue", "RetuneTicket"]

@@ -1,0 +1,200 @@
+"""Segment compaction / GC: rewrite-and-swap that keeps live tails honest
+(DESIGN.md §13).
+
+An append-only store only ever grows; compaction folds the *sealed*
+segments of a directory store — every segment except each writer pid's
+highest-numbered one, which may still be held open by a live appender —
+into a single ``segment-0-<gen>.jsonl``, dropping what retention allows:
+
+  * superseded ``context="prod"`` telemetry past the retention window
+    (a later measurement of the same (fingerprint, config) exists), so
+    serving writeback is bounded by the number of distinct configs served
+    rather than the number of decode steps;
+  * completed re-tune control groups (``kind="retune"`` submit/claim/done
+    triples whose ``done`` landed before the window).
+
+Everything else — tuning observations, fingerprint descriptors, open
+retune requests — survives verbatim, so resolution (``best_sharding_config``,
+``HotConfigSource``) is identical before and after.
+
+The swap is crash-safe and watcher-safe:
+
+  1. the compacted segment is written complete to a temp name and renamed
+     into place (atomic; its first line is a ``kind="compact"`` header
+     naming the folded sources, and every copied record carries a
+     ``src=[[segment, byte_offset], ...]`` provenance chain — one hop per
+     compaction it has survived);
+  2. only then are the source files unlinked.
+
+A concurrent ``StoreWatcher`` keeps exactly-once delivery through the swap:
+``segment-0-*`` sorts before every live segment, so a watcher meets the
+header before it could touch a folded source again, retires those tails,
+and checks the ``src`` hops against each incarnation's consumed byte
+frontier to deliver precisely the records it had not yet seen. A crash between rename
+and unlink leaves records duplicated on disk but NOT double-delivered to
+watchers (the header retires the sources first); re-running compaction
+converges. Single-file stores have no sealed segments and cannot be
+compacted.
+
+"Sealed" is judged per writer pid (everything below the pid's
+highest-numbered segment), so it assumes at most one LIVE appender per
+process: a process holding several open appenders on one store must close
+(seal) all but its newest before compaction may run — the loop-sim's
+``seal_segment`` models exactly that. A lock-file handshake making both
+this and the one-compactor-at-a-time assumption explicit is a ROADMAP
+item.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import re
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.store.index import build_index, iter_complete_lines, write_index
+from repro.store.records import (_is_single_file, _segment_high_water,
+                                 list_segments)
+
+_SEG_RE = re.compile(r"segment-(\d+)-(\d+)\.jsonl$")
+
+
+@dataclass
+class CompactionStats:
+    """What one ``compact_store`` call did."""
+
+    sources: List[str] = field(default_factory=list)
+    output: Optional[str] = None
+    records_in: int = 0
+    records_kept: int = 0
+    dropped_prod: int = 0
+    dropped_retune: int = 0
+    bytes_before: int = 0
+    bytes_after: int = 0
+
+    @property
+    def folded(self) -> bool:
+        return self.output is not None
+
+
+def _parse_seg(name: str) -> Optional[Tuple[int, int]]:
+    m = _SEG_RE.match(name)
+    return (int(m.group(1)), int(m.group(2))) if m else None
+
+
+def compact_store(path: str, *, retention_s: float = math.inf,
+                  now: Optional[float] = None,
+                  clock=time.time) -> CompactionStats:
+    """Fold the sealed segments of a directory store. ``retention_s`` bounds
+    the GC window (default: keep everything — pure folding); ``now`` pins
+    the window edge for deterministic tests. One compactor at a time."""
+    if _is_single_file(path):
+        raise ValueError("compaction requires a directory store "
+                         "(a single-file journal is one live segment)")
+    t_now = clock() if now is None else float(now)
+    stats = CompactionStats()
+    segs = [(seg, _parse_seg(os.path.basename(seg)))
+            for seg in list_segments(path, False)]
+    active: Dict[int, int] = {}
+    for _, parsed in segs:
+        if parsed and parsed[0] != 0:
+            active[parsed[0]] = max(active.get(parsed[0], -1), parsed[1])
+    sources = [seg for seg, parsed in segs
+               if parsed and (parsed[0] == 0 or parsed[1] < active[parsed[0]])]
+    if not sources:
+        return stats
+    stats.sources = [os.path.basename(s) for s in sources]
+
+    # -- scan the sources: descriptors, surviving candidates, high water ----
+    high_water: Dict[int, int] = {}
+    fps: Dict[str, dict] = {}
+    entries: List[Tuple[str, int, dict]] = []     # (src_name, line_no, dict)
+    for seg in sources:
+        name = os.path.basename(seg)
+        pid, k = _parse_seg(name)
+        high_water[pid] = max(high_water.get(pid, -1), k)
+        stats.bytes_before += os.path.getsize(seg)
+        for offset, nbytes, raw in iter_complete_lines(seg):
+            text = raw.decode("utf-8").strip()
+            if not text:
+                continue
+            d = json.loads(text)
+            kind = d.get("kind")
+            if kind == "compact":
+                for p, hk in d.get("high_water", {}).items():
+                    p = int(p)
+                    high_water[p] = max(high_water.get(p, -1), int(hk))
+            elif kind == "fp":
+                fps.setdefault(d["digest"], d)
+            else:
+                entries.append((name, offset, d))
+    stats.records_in = len(entries)
+
+    # -- GC decisions -------------------------------------------------------
+    prod_digests = {dg for dg, d in fps.items()
+                    if d.get("context") == "prod"}
+    # superseded = a LATER record for the same (fingerprint, config index)
+    # exists among the folded sources (idx None — configless telemetry —
+    # supersedes per fingerprint, bounding defaults journaling too)
+    last_at: Dict[Tuple[str, Optional[int]], int] = {}
+    retune_done_t: Dict[str, float] = {}
+    for i, (_, _, d) in enumerate(entries):
+        if d.get("kind") == "obs" and d.get("fp") in prod_digests:
+            last_at[(d["fp"], d.get("idx"))] = i
+        elif d.get("kind") == "retune" and d.get("state") == "done":
+            rid = d.get("id", "")
+            retune_done_t[rid] = max(retune_done_t.get(rid, 0.0),
+                                     float(d.get("t", 0.0)))
+    dead_retunes = {rid for rid, t in retune_done_t.items()
+                    if t < t_now - retention_s}
+    kept: List[Tuple[str, int, dict]] = []
+    for i, (src, offset, d) in enumerate(entries):
+        kind = d.get("kind")
+        if kind == "obs" and d.get("fp") in prod_digests \
+                and last_at[(d["fp"], d.get("idx"))] != i \
+                and float(d.get("t", 0.0)) < t_now - retention_s:
+            stats.dropped_prod += 1
+            continue
+        if kind == "retune" and d.get("id", "") in dead_retunes:
+            stats.dropped_retune += 1
+            continue
+        kept.append((src, offset, d))
+    stats.records_kept = len(kept)
+
+    # -- rewrite and swap ---------------------------------------------------
+    hw_disk = _segment_high_water(path)
+    gen = max(high_water.get(0, -1), hw_disk.get(0, -1)) + 1
+    out_name = f"segment-0-{gen}.jsonl"
+    out_path = os.path.join(path, out_name)
+    tmp = out_path + ".tmp"
+    merged_hw = dict(hw_disk)
+    for p, hk in high_water.items():
+        merged_hw[p] = max(merged_hw.get(p, -1), hk)
+    with open(tmp, "w") as f:
+        f.write(json.dumps({
+            "kind": "compact", "v": 1, "gen": gen, "t": t_now,
+            "sources": stats.sources,
+            "high_water": {str(p): hk for p, hk in
+                           sorted(merged_hw.items())}}) + "\n")
+        for digest in sorted(fps):
+            f.write(json.dumps(fps[digest]) + "\n")
+        for src, offset, d in kept:
+            d = dict(d)
+            # provenance CHAIN, one hop per survived compaction: a watcher
+            # skips a record if ANY prior incarnation was already consumed
+            # — a single hop is not enough when a compacted segment is
+            # folded again before some watcher ever read it
+            prior = d.get("src") or []
+            d["src"] = list(prior) + [[src, offset]]
+            f.write(json.dumps(d) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, out_path)          # the swap: compacted data is visible
+    for seg in sources:                # only now may the sources disappear
+        os.unlink(seg)
+    stats.output = out_name
+    stats.bytes_after = os.path.getsize(out_path)
+    write_index(path, build_index(path))   # keep lazy opens O(hot set)
+    return stats

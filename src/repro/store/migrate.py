@@ -81,6 +81,11 @@ def migrate_checkpoint(path: str, fingerprint: SpaceFingerprint,
             fingerprint=fingerprint)
     store.close()
     os.replace(tmp, path)
+    # the rewrite invalidated any sidecar index byte offsets; refresh it so
+    # the next lazy open reads the index instead of rebuilding from scratch
+    from repro.store import index as sidx
+    if os.path.exists(sidx.index_path(path)):
+        sidx.write_index(path, sidx.build_index(path))
     return len(data["journal"])
 
 

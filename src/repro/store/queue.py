@@ -1,0 +1,214 @@
+"""Durable re-tune queue: the serve→tune control plane IN the store
+(DESIGN.md §13).
+
+PR 4's ``repro.core.engine.RetuneQueue`` lives in one process's memory — a
+drift request dies with the server that noticed it, and a re-tune daemon on
+another host can never see it. This module moves the queue into the record
+store itself as append-only ``kind="retune"`` control records, so the queue
+inherits every durability property observations already have (per-record
+flush, torn-line tolerance, segment rollover, compaction survival):
+
+    {"kind": "retune", "state": "submit", "id", "key", "objective",
+     "observed", "predicted", "reason", "t", "by"}
+    {"kind": "retune", "state": "claim",  "id", "key", "by", "t"}
+    {"kind": "retune", "state": "done",   "id", "key", "by", "t"}
+
+A request's lifecycle is the fold of its records: *open* until a ``done``
+lands; *claimable* while no unexpired claim exists (a claimant that died
+re-arms after ``claim_ttl``). Dedupe is per cell ``key``: one open request
+per cell however many servers observe the same drift — the ``submit`` check
+is check-then-append, so servers racing within one flush latency can slip
+duplicates through, and ``done`` therefore coalesces: servicing a cell
+closes every open request for it (one re-tune satisfies them all; drift
+after the swap re-arms fresh). Claim arbitration is
+first-timestamp-wins — ``claim()`` appends its claim, re-reads, and only
+returns the ticket if its own claim is the earliest unexpired one; with a
+single daemon per store this is exactly-once, with racing daemons it is
+best-effort dedupe (the race window is the flush latency of one line).
+
+Crash matrix:
+  * submitter dies after ``submit`` — the request is on disk; any daemon
+    claims and services it;
+  * claimant dies before ``done`` — the claim expires after ``claim_ttl``
+    and the request becomes claimable again;
+  * claimant dies after ``done`` — the cell re-arms; the *work* (the
+    re-tune run's observations) was journaled by the engine as it ran;
+  * torn final line of any control record — invisible (incomplete lines
+    are never consumed), state unchanged;
+  * compaction — open requests are copied verbatim; completed
+    submit/claim/done groups older than the retention window are folded
+    away (``repro.store.compact``).
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.store.records import TuningRecordStore
+from repro.store.watch import StoreWatcher
+
+
+@dataclass
+class RetuneTicket:
+    """Folded state of one request id."""
+
+    id: str
+    key: str
+    objective: str = ""
+    observed: float = float("nan")
+    predicted: float = float("nan")
+    reason: str = "drift"
+    t: float = 0.0
+    submitted_by: str = ""
+    claims: List[Tuple[float, str]] = field(default_factory=list)
+    done: bool = False
+
+
+class DurableRetuneQueue:
+    """Store-backed drift-request intake; drop-in for the in-process
+    ``RetuneQueue``'s ``submit`` side of the online serve loop, plus
+    ``claim``/``done`` for daemons. All state is the store — a fresh
+    instance on the same path sees everything prior processes did."""
+
+    def __init__(self, path: str, *, worker: Optional[str] = None,
+                 claim_ttl: float = 3600.0, clock=time.time, appender=None):
+        """``appender`` shares an already-open ``TuningRecordStore`` for the
+        control-record writes. Pass the process's existing appender (the
+        serve loop passes its ``ProdRecorder``'s) — compaction judges
+        "sealed" per pid, so a process must keep ONE live append segment,
+        not one per component."""
+        self.path = path
+        self.worker = worker or f"proc-{os.getpid()}"
+        self.claim_ttl = float(claim_ttl)
+        self.clock = clock
+        self._owns_store = appender is None
+        self._store = (appender if appender is not None
+                       else TuningRecordStore(path, load=False))
+        self._watcher = StoreWatcher(path, from_start=True,
+                                     collect_controls=True)
+        self._tickets: Dict[str, RetuneTicket] = {}
+        # fold the store's current control state NOW: the first refresh
+        # replays every segment, and paying that at construction keeps it
+        # off the serve loop's decode latency path (submit happens between
+        # decode steps). Index-seeded folding is a ROADMAP item.
+        self._refresh()
+
+    # -- folding ------------------------------------------------------------
+    def _fold(self, d: dict) -> None:
+        state, rid = d.get("state"), str(d.get("id", ""))
+        if not rid:
+            return
+        if state == "submit":
+            if rid not in self._tickets:
+                self._tickets[rid] = RetuneTicket(
+                    id=rid, key=str(d.get("key", "")),
+                    objective=str(d.get("objective", "")),
+                    observed=float(d.get("observed", float("nan"))),
+                    predicted=float(d.get("predicted", float("nan"))),
+                    reason=str(d.get("reason", "drift")),
+                    t=float(d.get("t", 0.0)),
+                    submitted_by=str(d.get("by", "")))
+        elif state == "claim":
+            tk = self._tickets.get(rid)
+            if tk is not None:
+                entry = (float(d.get("t", 0.0)), str(d.get("by", "")))
+                if entry not in tk.claims:
+                    tk.claims.append(entry)
+        elif state == "done":
+            tk = self._tickets.get(rid)
+            if tk is not None:
+                tk.done = True
+
+    def _refresh(self) -> None:
+        self._watcher.poll()            # observations are not our business
+        for d in self._watcher.drain_controls():
+            self._fold(d)
+
+    def _active_claim(self, tk: RetuneTicket,
+                      now: float) -> Optional[Tuple[float, str]]:
+        live = [c for c in tk.claims if now - c[0] <= self.claim_ttl]
+        return min(live) if live else None
+
+    # -- producer side (serve loop) -----------------------------------------
+    def submit(self, req) -> bool:
+        """Enqueue unless the cell already has an open request. ``req`` is
+        anything with the ``RetuneRequest`` fields (key/objective/observed/
+        predicted/reason/t). Durable once this returns True."""
+        self._refresh()
+        key = str(req.key)
+        if any(tk.key == key and not tk.done
+               for tk in self._tickets.values()):
+            return False
+        t = float(getattr(req, "t", 0.0) or self.clock())
+        # full-precision timestamp in the id: %g truncates to 6 significant
+        # digits, which at wall-clock magnitudes collides within hours and
+        # would fold a fresh submit into an old done ticket
+        d = {"kind": "retune", "state": "submit",
+             "id": f"{key}@{t!r}/{self.worker}", "key": key,
+             "objective": str(getattr(req, "objective", "")),
+             "observed": float(getattr(req, "observed", float("nan"))),
+             "predicted": float(getattr(req, "predicted", float("nan"))),
+             "reason": str(getattr(req, "reason", "drift")),
+             "t": t, "by": self.worker}
+        self._store.append_control(d)
+        self._fold(d)
+        return True
+
+    # -- consumer side (retune daemon) --------------------------------------
+    def claim(self) -> Optional[RetuneTicket]:
+        """Claim the oldest claimable request: append the claim, re-read,
+        and win only if our claim is the earliest unexpired one."""
+        self._refresh()
+        now = self.clock()
+        open_unclaimed = [tk for tk in self._tickets.values()
+                          if not tk.done
+                          and self._active_claim(tk, now) is None]
+        if not open_unclaimed:
+            return None
+        tk = min(open_unclaimed, key=lambda tk: (tk.t, tk.id))
+        mine = (float(now), self.worker)
+        d = {"kind": "retune", "state": "claim", "id": tk.id, "key": tk.key,
+             "by": self.worker, "t": mine[0]}
+        self._store.append_control(d)
+        self._fold(d)
+        self._refresh()                 # absorb racing claims
+        winner = self._active_claim(tk, self.clock())
+        return tk if winner == mine else None
+
+    def done(self, ticket) -> None:
+        """Mark a claimed request serviced; the cell re-arms for new
+        submissions. ``ticket`` is a RetuneTicket or an id string.
+
+        Coalesces: every OTHER open request for the same cell is closed
+        too — ``submit``'s dedupe is check-then-append, so servers racing
+        within one flush latency can durably enqueue duplicates for one
+        drift event, and the re-tune that just ran satisfies all of them
+        (post-swap drift re-arms fresh)."""
+        rid = ticket if isinstance(ticket, str) else ticket.id
+        self._refresh()
+        tk = self._tickets.get(rid)
+        key = tk.key if tk is not None else ""
+        now = float(self.clock())
+        close = [rid] + [other.id for other in self._tickets.values()
+                         if key and other.key == key and not other.done
+                         and other.id != rid]
+        for cid in close:
+            d = {"kind": "retune", "state": "done", "id": cid, "key": key,
+                 "by": self.worker, "t": now}
+            self._store.append_control(d)
+            self._fold(d)
+
+    # -- introspection ------------------------------------------------------
+    def open_tickets(self) -> List[RetuneTicket]:
+        self._refresh()
+        return sorted((tk for tk in self._tickets.values() if not tk.done),
+                      key=lambda tk: (tk.t, tk.id))
+
+    def __len__(self) -> int:
+        return len(self.open_tickets())
+
+    def close(self) -> None:
+        if self._owns_store:               # never close a shared appender
+            self._store.close()

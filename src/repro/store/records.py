@@ -20,7 +20,21 @@ Layout:
 Each line is either a fingerprint descriptor (``kind: fp`` — written once
 per digest per segment, making segments self-contained) or an observation
 (``kind: obs``). Appends are flushed per record, so a killed run leaves a
-valid record-stream prefix; a torn final line is tolerated on load.
+valid record-stream prefix; a torn final line is tolerated on load. Two
+further kinds are control plane, not observations: ``kind: compact``
+(compaction headers, ``repro.store.compact``) and ``kind: retune`` (the
+durable re-tune queue, ``repro.store.queue``) — the loader skips both.
+
+Open modes:
+  * ``load=True`` (default) — parse every segment into memory; right for
+    small stores and for whole-store consumers;
+  * ``load=False`` — write-only appender, O(1) startup;
+  * ``lazy=True`` — read only the sidecar segment index
+    (``repro.store.index``, rebuilt on demand when stale or missing) plus
+    any bytes appended past it, and materialize a fingerprint's records
+    only when a caller touches that digest: O(hot set) opens on
+    fleet-scale stores. Queries answer from the open-time snapshot, the
+    same visibility ``load=True`` gives.
 """
 from __future__ import annotations
 
@@ -187,22 +201,67 @@ def list_segments(path: str, single_file: bool) -> List[str]:
     return [os.path.join(path, f) for f in names]
 
 
+def _segment_high_water(path: str) -> Dict[int, int]:
+    """Highest segment number ever FOLDED per writer pid, read from the
+    compaction headers of ``segment-0-*.jsonl`` outputs. Compaction deletes
+    its source files; a writer that restarted its numbering below the high
+    water would reuse a deleted name and corrupt concurrent watcher tails,
+    so ``_handle`` starts new segments past it. Headers carry the merged
+    high water of everything they transitively folded, so one header level
+    is enough."""
+    hw: Dict[int, int] = {}
+    if not os.path.isdir(path):
+        return hw
+    for name in os.listdir(path):
+        if not re.match(r"segment-0-\d+\.jsonl$", name):
+            continue
+        try:
+            with open(os.path.join(path, name)) as f:
+                d = json.loads(f.readline())
+        except (OSError, json.JSONDecodeError):
+            continue
+        if not isinstance(d, dict) or d.get("kind") != "compact":
+            continue
+        for pid, k in d.get("high_water", {}).items():
+            try:
+                pid = int(pid)
+            except ValueError:
+                continue
+            hw[pid] = max(hw.get(pid, -1), int(k))
+    return hw
+
+
 class TuningRecordStore:
     """Append-only JSONL segments + in-memory index by fingerprint digest."""
 
-    def __init__(self, path: str, *, load: bool = True):
+    def __init__(self, path: str, *, load: bool = True, lazy: bool = False):
         """``load=False`` opens a write-only appender: no segment parse, no
         in-memory index — O(1) startup however large the store has grown.
         For producers that only ever ``append`` (serving telemetry); queries
-        on such an instance see only its own appends."""
+        on such an instance see only its own appends. ``lazy=True`` opens
+        through the sidecar segment index instead (``repro.store.index``):
+        O(index + un-indexed tail) startup, per-digest materialization on
+        first touch, identical query results on an unchanged store."""
         self.path = path
         self.single_file = _is_single_file(path)
+        self.lazy = bool(lazy)
+        self.bytes_read = 0                # data-plane bytes this instance read
         self._records: List[TuningRecord] = []
         self._by_fp: Dict[str, List[int]] = {}
         self._fps: Dict[str, SpaceFingerprint] = {}
         self._fh = None                    # lazy append handle
         self._written_fps: set = set()     # descriptors this handle has written
-        if load:
+        # lazy-mode state: sidecar index, open-time tail scan, per-digest
+        # materialization cache, and this instance's own appends
+        self._index = None
+        self._tail: Dict[str, Dict[str, List[TuningRecord]]] = {}
+        self._tail_total = 0
+        self._mat: Dict[str, List[TuningRecord]] = {}
+        self._appended_by_fp: Dict[str, List[TuningRecord]] = {}
+        self._appended_total = 0
+        if self.lazy:
+            self._open_lazy()
+        elif load:
             self._load()
 
     # -- loading ------------------------------------------------------------
@@ -212,7 +271,9 @@ class TuningRecordStore:
     def _load(self) -> None:
         for seg in self._segments():
             with open(seg) as f:
-                lines = f.read().splitlines()
+                data = f.read()
+            self.bytes_read += len(data)
+            lines = data.splitlines()
             for k, line in enumerate(lines):
                 line = line.strip()
                 if not line:
@@ -237,11 +298,139 @@ class TuningRecordStore:
             rec = TuningRecord.from_json(d)
             self._by_fp.setdefault(rec.fp, []).append(len(self._records))
             self._records.append(rec)
+        elif kind in ("compact", "retune"):
+            pass    # control plane: compaction headers / durable queue
         else:
             raise ValueError(
                 f"{seg}:{lineno + 1}: unknown record kind {kind!r} — if this "
                 "is a legacy engine checkpoint, migrate it with "
                 "repro.store.migrate.migrate_checkpoint")
+
+    # -- lazy (indexed) loading ---------------------------------------------
+    def _open_lazy(self) -> None:
+        """Load the sidecar index (rebuilding it when stale/missing), then
+        scan only the bytes appended past each segment's indexed frontier.
+        A freshly indexed store opens by reading the index alone."""
+        from repro.store import index as sidx
+        idx = sidx.load_index(self.path)
+        if idx is not None:
+            try:
+                self.bytes_read += os.path.getsize(sidx.index_path(self.path))
+            except OSError:
+                pass
+        if idx is None or sidx.index_is_stale(self.path, idx):
+            idx = sidx.build_index(self.path)
+            for seg in self._segments():
+                self.bytes_read += idx.segments.get(os.path.basename(seg), 0)
+            sidx.write_index(self.path, idx)    # best-effort sidecar refresh
+            self._index = idx
+            self._fps = {**idx.fps, **self._fps}
+            return
+        self._index = idx
+        self._fps = {**idx.fps, **self._fps}
+        for seg in self._segments():
+            name = os.path.basename(seg)
+            start = idx.segments.get(name, 0)
+            if os.path.getsize(seg) <= start:
+                continue
+            per_fp = self._tail.setdefault(name, {})
+            for offset, nbytes, raw in sidx.iter_complete_lines(seg, start):
+                self.bytes_read += nbytes
+                text = raw.decode("utf-8").strip()
+                if not text:
+                    continue
+                d = json.loads(text)
+                kind = d.get("kind")
+                if kind == "fp":
+                    fp = SpaceFingerprint.from_json(d)
+                    self._fps.setdefault(fp.digest, fp)
+                elif kind == "obs":
+                    rec = TuningRecord.from_json(d)
+                    per_fp.setdefault(rec.fp, []).append(rec)
+                    self._tail_total += 1
+
+    def _segment_path(self, name: str) -> str:
+        return self.path if self.single_file else os.path.join(self.path,
+                                                               name)
+
+    def _read_extent(self, extent, digest: str) -> List[TuningRecord]:
+        seg = self._segment_path(extent.segment)
+        with open(seg, "rb") as f:
+            f.seek(extent.offset)
+            data = f.read(extent.length)
+        self.bytes_read += len(data)
+        out: List[TuningRecord] = []
+        for raw in data.split(b"\n"):
+            text = raw.decode("utf-8").strip()
+            if not text:
+                continue
+            d = json.loads(text)
+            if d.get("kind") == "obs" and d.get("fp") == digest:
+                out.append(TuningRecord.from_json(d))
+        return out
+
+    def _materialize(self, digest: str) -> List[TuningRecord]:
+        """This digest's records from disk (indexed extents + open-time tail),
+        in global append order; cached. Own appends are tracked separately
+        (``_appended_by_fp``) so they are never double-counted. If a
+        compaction swapped segments out from under this snapshot, the open
+        is redone against the rewritten store and the read retried —
+        compaction preserves every non-GC'd record, so the answer is the
+        same."""
+        if digest in self._mat:
+            return self._mat[digest]
+        try:
+            return self._materialize_uncached(digest)
+        except FileNotFoundError:
+            self._reopen_lazy()
+            return self._materialize_uncached(digest)
+
+    def _reopen_lazy(self) -> None:
+        """Drop the open-time snapshot and re-open against the rewritten
+        store. Own appends were flushed, so the fresh snapshot covers them
+        from disk — the append-side bookkeeping must reset with the rest or
+        they would be counted twice."""
+        self._tail, self._tail_total, self._mat = {}, 0, {}
+        self._appended_by_fp, self._appended_total = {}, 0
+        self._open_lazy()
+
+    def refresh(self) -> None:
+        """Re-snapshot a lazy store: appends landed by other processes
+        since open become visible and a concurrent compaction is absorbed.
+        Long-lived lazy consumers (the retune daemon) call this between
+        units of work; no-op in the other modes."""
+        if self.lazy:
+            self._reopen_lazy()
+
+    def _materialize_uncached(self, digest: str) -> List[TuningRecord]:
+        ext_by_seg: Dict[str, list] = {}
+        for e in self._index.extents.get(digest, ()):
+            ext_by_seg.setdefault(e.segment, []).append(e)
+        names = sorted(set(ext_by_seg) | set(self._tail), key=natural_key)
+        rows: List[TuningRecord] = []
+        for name in names:
+            for e in ext_by_seg.get(name, ()):
+                rows.extend(self._read_extent(e, digest))
+            rows.extend(self._tail.get(name, {}).get(digest, ()))
+        self._mat[digest] = rows
+        return rows
+
+    def _scan_all(self) -> List[TuningRecord]:
+        """Every observation on disk right now, in full-load order — the
+        lazy store's fallback for whole-store queries (``records()`` with no
+        digest). Own appends were flushed, so they are on disk too."""
+        from repro.store import index as sidx
+        rows: List[TuningRecord] = []
+        for seg in self._segments():
+            for offset, nbytes, raw in sidx.iter_complete_lines(seg):
+                self.bytes_read += nbytes
+                text = raw.decode("utf-8").strip()
+                if not text:
+                    continue
+                d = json.loads(text)
+                if d.get("kind") == "obs":
+                    rows.append(TuningRecord.from_json(d))
+        return rows
 
     # -- appending ----------------------------------------------------------
     def _handle(self):
@@ -253,7 +442,10 @@ class TuningRecordStore:
                 self._fh = open(self.path, "a")
             else:
                 os.makedirs(self.path, exist_ok=True)
-                k = 0
+                # start past both the segments on disk AND any compaction
+                # high water: reusing a folded (deleted) segment name would
+                # corrupt concurrent watcher tails
+                k = _segment_high_water(self.path).get(os.getpid(), -1) + 1
                 while True:
                     seg = os.path.join(self.path,
                                        f"segment-{os.getpid()}-{k}.jsonl")
@@ -289,8 +481,19 @@ class TuningRecordStore:
         fh = self._handle()
         fh.write(json.dumps(rec.to_json()) + "\n")
         fh.flush()
-        self._by_fp.setdefault(rec.fp, []).append(len(self._records))
-        self._records.append(rec)
+        if self.lazy:
+            self._appended_by_fp.setdefault(rec.fp, []).append(rec)
+            self._appended_total += 1
+        else:
+            self._by_fp.setdefault(rec.fp, []).append(len(self._records))
+            self._records.append(rec)
+
+    def append_control(self, d: Dict[str, Any]) -> None:
+        """Append one raw control record (``kind`` other than fp/obs) —
+        the durable queue's write path. Flushed like observations."""
+        fh = self._handle()
+        fh.write(json.dumps(d) + "\n")
+        fh.flush()
 
     def extend(self, recs: Iterable[TuningRecord],
                fingerprint: Optional[SpaceFingerprint] = None) -> None:
@@ -305,6 +508,8 @@ class TuningRecordStore:
 
     # -- queries ------------------------------------------------------------
     def __len__(self) -> int:
+        if self.lazy:
+            return self._index.total + self._tail_total + self._appended_total
         return len(self._records)
 
     def fingerprints(self) -> Dict[str, SpaceFingerprint]:
@@ -315,10 +520,19 @@ class TuningRecordStore:
 
     def records(self, fp: Optional[str] = None,
                 run: Optional[str] = None) -> List[TuningRecord]:
-        """Records in append order, optionally filtered by digest and/or run."""
+        """Records in append order, optionally filtered by digest and/or run.
+        On a lazy store, passing a digest reads only that digest's extents;
+        ``fp=None`` falls back to a full segment scan (preserving the same
+        global order a ``load=True`` open returns) — whole-store consumers
+        should open with ``load=True`` instead."""
         if fp is not None:
-            rows: Sequence[TuningRecord] = [self._records[i]
-                                            for i in self._by_fp.get(fp, ())]
+            if self.lazy:
+                rows: Sequence[TuningRecord] = (
+                    self._materialize(fp) + self._appended_by_fp.get(fp, []))
+            else:
+                rows = [self._records[i] for i in self._by_fp.get(fp, ())]
+        elif self.lazy:
+            rows = self._scan_all()
         else:
             rows = self._records
         if run is not None:
@@ -327,12 +541,19 @@ class TuningRecordStore:
 
     def runs(self, fp: Optional[str] = None) -> List[str]:
         seen: Dict[str, None] = {}
-        for r in (self.records(fp=fp) if fp is not None else self._records):
+        for r in self.records(fp=fp):
             seen.setdefault(r.run, None)
         return list(seen)
 
     def best(self, fp: str) -> Optional[TuningRecord]:
-        """Best (lowest finite value) record for an exact fingerprint."""
+        """Best (lowest finite value) record for an exact fingerprint; the
+        first record achieving the minimum wins, matching full-load order.
+        On a lazy store whose digest has no un-indexed tail or own appends,
+        this reads ONE extent: the first whose cached best equals the
+        digest's minimum — earlier extents all have strictly worse bests,
+        so their records cannot be the first achiever."""
+        if self.lazy:
+            return self._lazy_best(fp)
         best: Optional[TuningRecord] = None
         for i in self._by_fp.get(fp, ()):
             r = self._records[i]
@@ -340,6 +561,36 @@ class TuningRecordStore:
                                            or r.value < best.value):
                 best = r
         return best
+
+    @staticmethod
+    def _first_min(rows: Sequence[TuningRecord]) -> Optional[TuningRecord]:
+        best: Optional[TuningRecord] = None
+        for r in rows:
+            if math.isfinite(r.value) and (best is None
+                                           or r.value < best.value):
+                best = r
+        return best
+
+    def _lazy_best(self, fp: str) -> Optional[TuningRecord]:
+        tail_or_appended = (fp in self._appended_by_fp or any(
+            fp in per_fp for per_fp in self._tail.values()))
+        if fp in self._mat or tail_or_appended:
+            return self._first_min(self.records(fp=fp))
+        exts = self._index.extents.get(fp, ())
+        bests = [e.best for e in exts if e.best is not None]
+        if not bests:
+            return None
+        m = min(bests)
+        for e in exts:
+            if e.best == m:
+                try:
+                    rows = self._read_extent(e, fp)
+                except FileNotFoundError:
+                    # compaction swapped the snapshot: reopen and fall back
+                    self._reopen_lazy()
+                    return self._lazy_best(fp)
+                return self._first_min(rows)
+        return None
 
     def best_config(self, fp) -> Optional[Tuple[Dict[str, Any], float]]:
         """(config, value) of the best prior evaluation for this problem.

@@ -34,7 +34,9 @@ def best_sharding_config(store, arch: str, shape: str, mesh: str = "single",
     if isinstance(store, str):
         if not os.path.exists(store):
             return None
-        store = TuningRecordStore(store)
+        # indexed open: resolution touches one cell's fingerprints, so a
+        # fleet-scale store must not be parsed wholesale per lookup
+        store = TuningRecordStore(store, lazy=True)
     from repro.core.tuning_targets import sharding_space
     space = sharding_space(arch, shape, wide=wide)
     fp = SpaceFingerprint.of(space, objective=cell_objective(arch, shape, mesh))

@@ -35,7 +35,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.store.records import (SpaceFingerprint, TuningRecord,
                                  TuningRecordStore, _is_single_file,
-                                 list_segments)
+                                 list_segments, natural_key)
 from repro.store.resolve import cell_objective
 
 
@@ -56,7 +56,11 @@ _DIR_SETTLE_NS = 2_000_000_000
 @dataclass
 class _Tail:
     """Read position in one segment: only COMPLETE lines are consumed, so a
-    torn final line (killed or mid-flush writer) is left for the next poll."""
+    torn final line (killed or mid-flush writer) is left for the next poll.
+    ``offset`` doubles as the consumed frontier compaction provenance is
+    checked against: a record stamped with a source byte offset below it
+    was already consumed under that incarnation (delivered, or skipped as
+    pre-open history by a ``from_start=False`` tail)."""
     offset: int = 0
     mtime: float = -1.0
 
@@ -69,13 +73,29 @@ class StoreWatcher:
     ``from_start=True`` the first poll replays the whole store — that is how
     a serving process does its initial resolution and its hot reloads
     through one code path.
+
+    Compaction-safe: a ``kind="compact"`` header retires the folded source
+    segments before this poll could touch them again (the compacted segment
+    sorts first), and each copied record's ``src=[[segment, byte_offset],
+    ...]`` provenance chain is checked against the consumed byte frontier
+    of every prior incarnation — so a rewrite-and-swap mid-tail re-delivers
+    nothing and loses nothing.
+
+    ``collect_controls=True`` additionally retains ``kind="retune"`` control
+    records for ``drain_controls()`` (the durable queue's read path);
+    otherwise they are skipped.
     """
 
-    def __init__(self, path: str, *, from_start: bool = True):
+    def __init__(self, path: str, *, from_start: bool = True,
+                 collect_controls: bool = False):
         self.path = path
         self.single_file = _is_single_file(path)
+        self.collect_controls = bool(collect_controls)
         self._tails: Dict[str, _Tail] = {}
         self._fps: Dict[str, SpaceFingerprint] = {}
+        self._dead: set = set()       # folded source segments (full paths)
+        self._folded: Dict[str, float] = {}   # basename -> consumed lines
+        self._controls: List[Dict[str, Any]] = []
         self._dir_mtime_ns = -1       # segment-discovery cache (dir mode)
         if not from_start:
             for seg in self._segments():
@@ -91,9 +111,45 @@ class StoreWatcher:
     def fingerprints(self) -> Dict[str, SpaceFingerprint]:
         return dict(self._fps)
 
+    def drain_controls(self) -> List[Dict[str, Any]]:
+        out, self._controls = self._controls, []
+        return out
+
+    def _retire(self, basename: str) -> None:
+        """A compaction header folded this source: never read it again, and
+        remember its consumed byte frontier — records resurfacing from the
+        compacted copy below that offset are already consumed."""
+        path = (self.path if self.single_file
+                else os.path.join(self.path, basename))
+        consumed = self._consumed_bytes(basename)
+        prior = self._folded.get(basename)
+        self._folded[basename] = (consumed if prior is None
+                                  else max(prior, consumed))
+        self._dead.add(path)
+
+    def _consumed_bytes(self, basename: str) -> float:
+        """Consumed byte frontier of a segment under any incarnation:
+        retired frontier if folded, live tail offset otherwise (which for a
+        ``from_start=False`` tail starts at the open-time size — pre-open
+        history counts consumed, post-open appends do not)."""
+        if basename in self._folded:
+            return self._folded[basename]
+        path = (self.path if self.single_file
+                else os.path.join(self.path, basename))
+        tail = self._tails.get(path)
+        return float(tail.offset) if tail is not None else 0.0
+
+    def _already_delivered(self, chain) -> bool:
+        """True if any hop of a compacted record's provenance chain lies
+        below the consumed frontier of that incarnation."""
+        return any(int(offset) < self._consumed_bytes(name)
+                   for name, offset in chain)
+
     def poll(self) -> List[TuningRecord]:
         """New complete observations, in write order (per segment; segments
-        in rollover order — known segments first, newly discovered after)."""
+        in rollover order — the same natural-numeric order the loader uses,
+        which also puts a fresh compacted segment, holding the oldest
+        records, ahead of every live one)."""
         out: List[TuningRecord] = []
         known = list(self._tails)
         fresh: List[str] = []
@@ -115,7 +171,11 @@ class StoreWatcher:
                 fresh = [s for s in self._segments()
                          if s not in self._tails]
                 self._dir_mtime_ns = dir_mtime_ns
-        for seg in known + fresh:
+        order = sorted(set(known) | set(fresh),
+                       key=lambda p: natural_key(os.path.basename(p)))
+        for seg in order:
+            if seg in self._dead:
+                continue
             tail = self._tails.setdefault(seg, _Tail())
             try:
                 st = os.stat(seg)
@@ -142,7 +202,19 @@ class StoreWatcher:
                     fp = SpaceFingerprint.from_json(d)
                     self._fps.setdefault(fp.digest, fp)
                 elif kind == "obs":
+                    src = d.get("src")
+                    if src is not None and self._already_delivered(src):
+                        continue    # delivered under a prior incarnation
                     out.append(TuningRecord.from_json(d))
+                elif kind == "compact":
+                    for name in d.get("sources", ()):
+                        self._retire(name)
+                elif kind == "retune":
+                    src = d.get("src")
+                    if self.collect_controls and (
+                            src is None
+                            or not self._already_delivered(src)):
+                        self._controls.append(d)
                 else:
                     raise ValueError(f"{seg}:@{tail.offset}: unknown record "
                                      f"kind {kind!r}")
@@ -162,12 +234,17 @@ class HotConfigSource:
     """
 
     def __init__(self, path: str, arch: str, shape: str,
-                 mesh: str = "single", *, wide: bool = False):
+                 mesh: str = "single", *, wide: bool = False,
+                 swap_margin: float = 0.0):
         from repro.core.tuning_targets import sharding_space
         space = sharding_space(arch, shape, wide=wide)
         self.objective_id = cell_objective(arch, shape, mesh)
         self.fp = SpaceFingerprint.of(space, objective=self.objective_id)
         self.watcher = StoreWatcher(path, from_start=True)
+        #: swap hysteresis (seconds of roofline step time): a same-tier
+        #: improvement must beat the deployed value by MORE than this to be
+        #: worth the re-jit a swap costs. 0.0 = historical always-swap.
+        self.swap_margin = float(swap_margin)
         self._best_exact: Optional[Tuple[Dict[str, Any], float]] = None
         self._best_cross: Optional[Tuple[Dict[str, Any], float]] = None
         self.current: Optional[Tuple[Dict[str, Any], float]] = None
@@ -192,7 +269,10 @@ class HotConfigSource:
         an exact-fingerprint record outranks any cross-digest fallback
         (even a lower-valued one — exact is the cell's own measured
         problem); within a tier, only a strictly lower roofline value
-        swaps. Returns None when nothing should change."""
+        swaps, and only by more than ``swap_margin`` — a sub-margin delta
+        never pays back the re-jit. A tier upgrade always swaps (it is what
+        a restarting server would deploy; the fleet must converge on it).
+        Returns None when nothing should change."""
         for rec in self.watcher.poll():
             self._fold(rec)
         if self._best_exact is not None:
@@ -209,19 +289,45 @@ class HotConfigSource:
                 # the deployed fallback): no swap, no re-jit
                 self.current, self._current_tier = cand, tier
                 return None
+            if tier == self._current_tier \
+                    and self.current[1] - cand[1] <= self.swap_margin:
+                return None     # better, but not worth a re-jit
         self.current, self._current_tier = cand, tier
         return cand
+
+
+def _quantile(sorted_vals: List[float], q: float) -> float:
+    """Linear-interpolated quantile of an ascending list (numpy 'linear')."""
+    n = len(sorted_vals)
+    if n == 1:
+        return sorted_vals[0]
+    pos = q * (n - 1)
+    lo = int(pos)
+    hi = min(lo + 1, n - 1)
+    return sorted_vals[lo] + (pos - lo) * (sorted_vals[hi] - sorted_vals[lo])
+
+
+def latency_summary(window: List[float]) -> Dict[str, float]:
+    """Windowed distribution summary journaled alongside each prod record:
+    the mean plus the p50/p99 tail — drift policies can key off the tail a
+    user actually feels instead of the median. Schema-additive (lives in
+    ``meta``); records without it still parse."""
+    s = sorted(window)
+    return {"p50": _quantile(s, 0.50), "p99": _quantile(s, 0.99),
+            "mean": sum(s) / len(s), "n": len(s)}
 
 
 class ProdRecorder:
     """Serving telemetry → store: measured latencies as ``context="prod"``
     records under the cell's parameter family (same grids as the tuning
     space, ``prod_objective`` id), so ``warm_matches`` transfers them into
-    future tuning runs as discounted cross-fingerprint priors."""
+    future tuning runs as discounted cross-fingerprint priors. Each decode
+    record additionally journals a windowed p50/p99/mean summary of the
+    last ``summary_window`` measurements (``meta``, schema-additive)."""
 
     def __init__(self, store, arch: str, shape: str, mesh: str = "single", *,
                  wide: bool = False, run_id: Optional[str] = None,
-                 clock=time.time):
+                 clock=time.time, summary_window: int = 16):
         from repro.core.tuning_targets import sharding_space
         # a path opens write-only: the recorder only ever appends, and a
         # fleet-scale store must not be parsed into memory per server
@@ -233,6 +339,8 @@ class ProdRecorder:
             context="prod")
         self.run_id = run_id or f"serve-{os.getpid()}"
         self.clock = clock
+        self.summary_window = max(int(summary_window), 1)
+        self._window: List[float] = []
         self._seq = 0
 
     @property
@@ -249,12 +357,18 @@ class ProdRecorder:
         key = (str(int(idx)) if idx is not None else
                "cfg:" + json.dumps(config, sort_keys=True, default=str)
                if config is not None else f"default:{self._seq}")
+        meta: Dict[str, Any] = {"phase": phase}
+        if phase == "decode":
+            # prefill is in different units and would poison the window
+            self._window = (self._window
+                            + [float(latency_s)])[-self.summary_window:]
+            meta.update(latency_summary(self._window))
         rec = TuningRecord(
             fp=self.fp.digest, run=self.run_id, seq=self._seq, key=key,
             idx=None if idx is None else int(idx), value=float(latency_s),
             config=None if config is None else dict(config),
             dur=float(latency_s), t=float(self.clock()),
-            meta={"phase": phase})
+            meta=meta)
         self._seq += 1
         self.store.append(rec, fingerprint=self.fp)
         return rec
@@ -263,21 +377,42 @@ class ProdRecorder:
 class DriftMonitor:
     """Windowed divergence of observed latency from the stored prediction.
 
-    Triggers when the median of the last ``window`` observations is off the
-    roofline prediction by more than ``factor`` in either direction (slower:
-    the stored config is stale for this hardware/load; faster: the roofline
-    itself is stale and tuning is mis-ranking). Re-arms by clearing the
-    window, so one drifted regime yields one trigger, not one per step."""
+    Triggers when the chosen window statistic (``stat``: the median by
+    default; ``"p99"`` keys the alarm off the tail users actually feel,
+    ``"mean"`` off throughput) of the last ``window`` observations is off
+    the roofline prediction by more than ``factor`` in either direction
+    (slower: the stored config is stale for this hardware/load; faster: the
+    roofline itself is stale and tuning is mis-ranking). Every ``observe``
+    surfaces the full windowed summary (``last_p50``/``last_p99``/
+    ``last_mean``) regardless of which statistic triggers. Re-arms by
+    clearing the window, so one drifted regime yields one trigger, not one
+    per step."""
+
+    STATS = ("median", "p50", "p99", "mean")
 
     def __init__(self, predicted: Optional[float] = None, *,
-                 factor: float = 1.5, window: int = 8):
+                 factor: float = 1.5, window: int = 8,
+                 stat: str = "median"):
         if factor <= 1.0:
             raise ValueError(f"drift factor must be > 1, got {factor}")
+        if stat not in self.STATS:
+            raise ValueError(f"drift stat must be one of {self.STATS}, "
+                             f"got {stat!r}")
         self.predicted = predicted
         self.factor = factor
         self.window = max(int(window), 1)
+        self.stat = stat
         self._obs: List[float] = []
         self.last_median: float = math.nan
+        self.last_p50: float = math.nan
+        self.last_p99: float = math.nan
+        self.last_mean: float = math.nan
+
+    @property
+    def last_stat(self) -> float:
+        """The triggering statistic's latest windowed value."""
+        return {"median": self.last_median, "p50": self.last_p50,
+                "p99": self.last_p99, "mean": self.last_mean}[self.stat]
 
     def rebase(self, predicted: Optional[float]) -> None:
         """New config deployed: new prediction, fresh window."""
@@ -291,15 +426,16 @@ class DriftMonitor:
         if len(self._obs) < self.window:
             return False
         self._obs = self._obs[-self.window:]
-        s = sorted(self._obs)
-        mid = len(s) // 2
-        med = s[mid] if len(s) % 2 else 0.5 * (s[mid - 1] + s[mid])
-        self.last_median = med
-        ratio = med / self.predicted
+        summary = latency_summary(self._obs)
+        self.last_median = self.last_p50 = summary["p50"]
+        self.last_p99 = summary["p99"]
+        self.last_mean = summary["mean"]
+        ratio = self.last_stat / self.predicted
         if ratio > self.factor or ratio < 1.0 / self.factor:
             self._obs = []
             return True
         return False
+
 
 
 @dataclass
@@ -393,7 +529,7 @@ class OnlineServeLoop:
                             self.source.objective_id if self.source else ""),
                         objective=(self.source.objective_id
                                    if self.source else ""),
-                        observed=self.monitor.last_median,
+                        observed=self.monitor.last_stat,
                         predicted=self.monitor.predicted or math.nan,
                         t=float(self.clock())))
                     stats.retunes_requested += int(accepted)

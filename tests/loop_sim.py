@@ -13,7 +13,12 @@ mocked on that side.
 
 This file is the template for end-to-end loop tests: build a ``LoopSim`` on
 a tmp store, script appends/serves/drift, assert on ``ServeStats`` and on
-the store contents. No sleeps, no subprocesses, no jax.
+the store contents. No sleeps, no subprocesses, no jax. §13 extensions:
+``durable_queue=True`` routes drift requests through the store-backed
+``DurableRetuneQueue`` (serviced by ``repro.launch.retune.RetuneDaemon``),
+``swap_margin`` exercises hot-reload hysteresis, and
+``seal_segment``/``compact`` script segment rollover and compaction
+mid-serve.
 """
 from __future__ import annotations
 
@@ -92,7 +97,9 @@ class LoopSim:
     def __init__(self, store_path: str, *, arch: str = ARCH,
                  shape: str = SHAPE, mesh: str = MESH,
                  drift_factor: float = 1.5, drift_window: int = 4,
-                 poll_every: int = 1, surface_seed: int = 0):
+                 drift_stat: str = "median", poll_every: int = 1,
+                 surface_seed: int = 0, swap_margin: float = 0.0,
+                 durable_queue: bool = False):
         self.clock = VirtualClock()
         self.space = sharding_space(arch, shape)
         self.times = cell_surface(self.space, seed=surface_seed)
@@ -103,13 +110,22 @@ class LoopSim:
         self.server = StubDecodeServer(
             self._latency_of, self.clock,
             default_latency=float(np.max(self.times)) * 1.5)
-        self.source = HotConfigSource(store_path, arch, shape, mesh)
+        self.source = HotConfigSource(store_path, arch, shape, mesh,
+                                      swap_margin=swap_margin)
         self.recorder = ProdRecorder(self.store, arch, shape, mesh,
                                      run_id="sim-serve", clock=self.clock)
         self.monitor = DriftMonitor(None, factor=drift_factor,
-                                    window=drift_window)
-        from repro.core.engine import RetuneQueue
-        self.queue = RetuneQueue()
+                                    window=drift_window, stat=drift_stat)
+        if durable_queue:
+            from repro.store.queue import DurableRetuneQueue
+            # appends through the sim's store handle: one live segment per
+            # pid, as compaction's "sealed" rule assumes of real servers
+            self.queue = DurableRetuneQueue(store_path, worker="sim-server",
+                                            clock=self.clock,
+                                            appender=self.store)
+        else:
+            from repro.core.engine import RetuneQueue
+            self.queue = RetuneQueue()
         self.loop = OnlineServeLoop(
             self.server, self.source, recorder=self.recorder,
             monitor=self.monitor, retune_queue=self.queue,
@@ -132,6 +148,17 @@ class LoopSim:
             config=self.space.config(int(idx)), t=self.clock()),
             fingerprint=self.fp)
         self._tuner_seq += 1
+
+    def seal_segment(self) -> None:
+        """Roll the scripted tuner's segment over (writer close + reopen):
+        the old segment becomes foldable by the next compaction."""
+        self.store.close()
+
+    def compact(self, retention_s: float = float("inf")):
+        """Run store compaction mid-sim, on the sim clock."""
+        from repro.store.compact import compact_store
+        return compact_store(self.store_path, retention_s=retention_s,
+                             clock=self.clock)
 
     def ranked_indices(self) -> np.ndarray:
         """Config indices sorted best-first on the true surface."""

@@ -234,6 +234,115 @@ def test_full_cycle_warm_retune_from_prod_beats_cold(tmp_path):
         assert stats.swaps[0][2] == pytest.approx(deployed_value)
 
 
+def test_durable_retune_survives_server_death_and_daemon_services(tmp_path):
+    """ISSUE 5 acceptance pin: a drift request submitted by one (simulated)
+    serving process survives that process's death as a durable store record,
+    is claimed EXACTLY ONCE by a separate ``launch/retune.py`` daemon, and
+    the serviced result lands back in the store for the fleet."""
+    path = str(tmp_path / "store")
+    sim = LoopSim(path, drift_window=4, durable_queue=True)
+    best = int(sim.ranked_indices()[0])
+    sim.append_tuning_record(best)
+    sim.serve(6)
+    sim.server.drift_scale = 2.0
+    stats = sim.serve(12)
+    assert stats.retunes_requested == 1
+    obj = sim.objective()                  # the cell's surface, kept aside
+    sim.store.close()
+    del sim                                # the serving process dies
+
+    from repro.launch.retune import RetuneDaemon
+    daemon = RetuneDaemon(path, objective_for=lambda key: obj,
+                          budget=20, worker="retune-daemon-1")
+    rival = RetuneDaemon(path, objective_for=lambda key: obj,
+                         budget=20, worker="retune-daemon-2")
+    res = daemon.step()
+    assert res is not None and math.isfinite(res.best_value)
+    assert daemon.serviced == 1
+    assert rival.step() is None, "the request is claimed exactly once"
+    assert daemon.step() is None, "done: nothing left to claim"
+
+    store = TuningRecordStore(path)
+    retune_runs = {r.run for r in store.records()
+                   if r.run.startswith("retune[")}
+    assert len(retune_runs) == 1, "the serviced run is journaled once"
+    # a resurrected server resolves through the same store and sees a
+    # config at least as good as what drifted
+    sim2 = LoopSim(path, durable_queue=True)
+    sim2.serve(1)
+    assert sim2.source.current is not None
+    assert sim2.source.current[1] <= float(sim2.times[best])
+    assert len(sim2.queue) == 0, "no open requests remain"
+
+
+def test_compaction_mid_serve_is_invisible_to_the_loop(tmp_path):
+    """ISSUE 5 acceptance pin: compaction racing a live serve loop loses no
+    records, re-delivers none (no spurious swap), and leaves resolution —
+    for the running server AND a fresh one — identical."""
+    path = str(tmp_path / "store")
+    sim = LoopSim(path)
+    ranked = sim.ranked_indices()
+    sim.append_tuning_record(int(ranked[40]))
+    sim.serve(3)
+    sim.seal_segment()                     # rollover: old segment foldable
+    sim.append_tuning_record(int(ranked[5]))
+    sim.serve(3)
+    assert sim.server.config == sim.space.config(int(ranked[5]))
+    before = sim.source.current
+    sim.seal_segment()
+    stats = sim.compact()
+    assert stats.folded and stats.records_kept == stats.records_in
+
+    serve_stats = sim.serve(4)             # the loop keeps running over it
+    assert serve_stats.swaps == [], \
+        "compacted copies of consumed records must not re-trigger a swap"
+    assert sim.source.current == before
+    # a restarting server resolves the compacted store identically
+    fresh = LoopSim(path)
+    fresh.serve(1)
+    assert fresh.source.current == before
+    # and nothing was lost: both tuning records are still on disk
+    store = TuningRecordStore(path)
+    assert {r.idx for r in store.records(fp=sim.fp.digest)} \
+        == {int(ranked[40]), int(ranked[5])}
+
+
+def test_sub_margin_improvement_does_not_trigger_rejit(tmp_path):
+    """Swap hysteresis (ROADMAP follow-up): a strictly better record whose
+    roofline delta is below ``swap_margin`` must NOT swap (no re-jit); a
+    beyond-margin improvement still must."""
+    sim_probe = LoopSim(str(tmp_path / "probe"))
+    ranked = sim_probe.ranked_indices()
+    v = sim_probe.times
+    deployed, nearby, big = int(ranked[10]), int(ranked[5]), int(ranked[0])
+    margin = float(v[deployed] - v[nearby]) + 1e-9
+    assert float(v[deployed] - v[big]) > margin, "surface sanity"
+
+    sim = LoopSim(str(tmp_path / "store"), swap_margin=margin)
+    sim.append_tuning_record(deployed)
+    stats = sim.serve(2)
+    assert len(stats.swaps) == 1           # initial deploy
+    sim.append_tuning_record(nearby)       # better, but sub-margin
+    stats = sim.serve(3)
+    assert stats.swaps == [] and len(sim.server.applied) == 1, \
+        "sub-margin improvement must not pay a re-jit"
+    assert sim.server.config == sim.space.config(deployed)
+    sim.append_tuning_record(big)          # beyond margin: worth it
+    stats = sim.serve(3)
+    assert len(stats.swaps) == 1
+    assert sim.server.config == sim.space.config(big)
+
+
+def test_margin_zero_preserves_always_swap(tmp_path):
+    sim = LoopSim(str(tmp_path / "store"))   # default swap_margin=0.0
+    ranked = sim.ranked_indices()
+    sim.append_tuning_record(int(ranked[10]))
+    sim.serve(2)
+    sim.append_tuning_record(int(ranked[9]))  # any strict improvement
+    stats = sim.serve(2)
+    assert len(stats.swaps) == 1
+
+
 def test_loop_sim_smoke():
     """CI smoke entry: the harness itself builds and one poll cycle runs."""
     clock = VirtualClock()

@@ -1,12 +1,17 @@
 """Concurrent store access: a tail-following reader vs a per-record-flushing
-writer.
+writer — now with compaction rewriting segments underneath both.
 
-The contract under test (ISSUE 4 satellite): however polls interleave with
-appends, ``StoreWatcher`` delivers every record EXACTLY ONCE, IN WRITE
-ORDER — including when the reader observes a torn (partially written) final
-line, and across a segment rollover (writer close + reopen). The
-deterministic cases pin the edges; the hypothesis property drives randomized
-interleavings of {write, poll, rollover} over both store layouts.
+The contract under test (ISSUE 4 satellite, extended by ISSUE 5): however
+polls interleave with appends, ``StoreWatcher`` delivers every record
+EXACTLY ONCE, IN WRITE ORDER — including when the reader observes a torn
+(partially written) final line, across a segment rollover (writer close +
+reopen), and across a ``compact_store`` rewrite-and-swap that folds sealed
+segments mid-tail. The sidecar index must survive the same traffic: a
+stale index (segments rewritten under it) rebuilds, a torn index write is
+treated as missing, and appends past the indexed frontier are picked up by
+the tail scan. The deterministic cases pin the edges; the hypothesis
+property drives randomized interleavings of {write, poll, rollover,
+compact}.
 """
 import json
 import os
@@ -16,7 +21,8 @@ import pytest
 
 from repro.core.searchspace import Param, SearchSpace
 from repro.store import (SpaceFingerprint, StoreWatcher, TuningRecord,
-                         TuningRecordStore)
+                         TuningRecordStore, compact_store, index_path,
+                         load_index)
 
 SPACE = SearchSpace([Param("a", (0, 1, 2, 3)), Param("b", (0, 1, 2))],
                     name="cc")
@@ -105,6 +111,193 @@ def test_torn_line_across_rollover(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# compaction vs a live tail (ISSUE 5)
+# ---------------------------------------------------------------------------
+def test_compaction_mid_tail_delivers_unconsumed_exactly_once(tmp_path):
+    """The core swap contract: a watcher that consumed some sealed segments
+    and never touched others must, after compaction folds them all into one
+    ``segment-0-*`` file, receive exactly the records it had NOT yet seen —
+    in write order, nothing twice."""
+    path = str(tmp_path / "store")
+    store = TuningRecordStore(path)
+    for seq in range(3):
+        store.append(_rec(seq), fingerprint=FP)
+    store.close()
+    watcher = StoreWatcher(path)
+    assert _drain(watcher) == [0, 1, 2]       # segment 0: fully consumed
+    store = TuningRecordStore(path)
+    for seq in range(3, 6):
+        store.append(_rec(seq), fingerprint=FP)
+    store.close()                              # segment 1: never polled
+    store = TuningRecordStore(path)
+    store.append(_rec(6), fingerprint=FP)      # segment 2: active writer
+
+    stats = compact_store(path)
+    assert stats.folded and len(stats.sources) == 2
+    assert _drain(watcher) == [3, 4, 5, 6], \
+        "exactly the unconsumed records, oldest first"
+    assert _drain(watcher) == []
+    store.append(_rec(7), fingerprint=FP)      # the live tail keeps working
+    assert _drain(watcher) == [7]
+    # a fresh reader sees one copy of everything, in order
+    assert _drain(StoreWatcher(path)) == list(range(8))
+    assert [int(r.key) for r in TuningRecordStore(path).records()] \
+        == list(range(8))
+
+
+def test_compaction_mid_segment_consumption(tmp_path):
+    """Partial consumption WITHIN one sealed segment: the watcher polled
+    half its records before the writer rolled over and compaction folded
+    it — the compacted copy must resume at the exact line the tail left."""
+    path = str(tmp_path / "store")
+    store = TuningRecordStore(path)
+    for seq in range(2):
+        store.append(_rec(seq), fingerprint=FP)
+    watcher = StoreWatcher(path)
+    assert _drain(watcher) == [0, 1]           # mid-segment tail position
+    for seq in range(2, 5):
+        store.append(_rec(seq), fingerprint=FP)
+    store.close()
+    store = TuningRecordStore(path)
+    store.append(_rec(5), fingerprint=FP)      # seals segment 0
+    compact_store(path)
+    assert _drain(watcher) == [2, 3, 4, 5]
+    assert _drain(watcher) == []
+
+
+def test_compaction_racing_appender_loses_nothing(tmp_path):
+    """An appender holding its segment open across a compaction keeps
+    appending into the same (untouched) file: compaction only folds sealed
+    segments, and the appender's numbering never reuses a folded name."""
+    path = str(tmp_path / "store")
+    old = TuningRecordStore(path)
+    for seq in range(3):
+        old.append(_rec(seq), fingerprint=FP)
+    old.close()
+    live = TuningRecordStore(path)
+    live.append(_rec(3), fingerprint=FP)       # live handle, active segment
+    watcher = StoreWatcher(path)
+    assert _drain(watcher) == [0, 1, 2, 3]
+    compact_store(path)
+    live.append(_rec(4), fingerprint=FP)       # racing append, same handle
+    live.append(_rec(5), fingerprint=FP)
+    assert _drain(watcher) == [4, 5]
+    live.close()
+    # rollover after compaction: the new segment's name must sort after the
+    # folded ones (numbering restarts past the compaction high water)
+    relay = TuningRecordStore(path)
+    relay.append(_rec(6), fingerprint=FP)
+    relay.close()
+    assert _drain(watcher) == [6]
+    assert _drain(StoreWatcher(path)) == list(range(7))
+
+
+def test_from_start_false_watcher_across_compaction(tmp_path):
+    """An opened-at-end watcher must treat pre-open history as consumed and
+    post-open appends as deliverable — including when compaction folds the
+    segment before the watcher's next poll (byte-offset provenance: the
+    open-time size IS the consumed frontier)."""
+    path = str(tmp_path / "store")
+    store = TuningRecordStore(path)
+    for seq in range(3):
+        store.append(_rec(seq), fingerprint=FP)      # pre-open history
+    watcher = StoreWatcher(path, from_start=False)
+    for seq in range(3, 5):
+        store.append(_rec(seq), fingerprint=FP)      # post-open, unpolled
+    store.close()
+    store = TuningRecordStore(path)
+    store.append(_rec(5), fingerprint=FP)            # seals segment 0
+    compact_store(path)
+    assert _drain(watcher) == [3, 4, 5], \
+        "history skipped, post-open appends survive the fold"
+    assert _drain(watcher) == []
+
+
+def test_double_compaction_chains_provenance(tmp_path):
+    """Folding a compacted segment again re-stamps provenance one level at
+    a time; a tail that consumed generation 1 must not see its records
+    resurface from generation 2."""
+    path = str(tmp_path / "store")
+    for seq in range(2):
+        store = TuningRecordStore(path)
+        store.append(_rec(seq), fingerprint=FP)
+        store.close()
+    watcher = StoreWatcher(path)
+    assert _drain(watcher) == [0, 1]
+    compact_store(path)                        # gen 1 folds both
+    assert _drain(watcher) == []
+    store = TuningRecordStore(path)
+    store.append(_rec(2), fingerprint=FP)
+    store.close()
+    assert _drain(watcher) == [2]
+    compact_store(path)                        # gen 2 folds gen 1 + segment
+    assert _drain(watcher) == []
+    assert _drain(StoreWatcher(path)) == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# sidecar index under concurrent traffic (ISSUE 5)
+# ---------------------------------------------------------------------------
+def _store_view(store: TuningRecordStore):
+    return ([r.to_json() for r in store.records(fp=FP.digest)],
+            None if store.best(FP.digest) is None
+            else store.best(FP.digest).to_json())
+
+
+def test_stale_index_rebuilt_when_segments_rewritten(tmp_path):
+    """An index referencing a segment that shrank or vanished (a rewrite it
+    never saw) is discarded and rebuilt — results match a full load."""
+    path = str(tmp_path / "store")
+    for seq in range(4):
+        store = TuningRecordStore(path)
+        store.append(_rec(seq), fingerprint=FP)
+        store.close()
+    TuningRecordStore(path, lazy=True)         # writes the sidecar
+    doomed = [f for f in sorted(os.listdir(path)) if f.endswith(".jsonl")][0]
+    os.remove(os.path.join(path, doomed))      # rewrite the index missed
+    lazy = TuningRecordStore(path, lazy=True)
+    assert _store_view(lazy) == _store_view(TuningRecordStore(path))
+    fresh = load_index(path)                   # sidecar was repaired too
+    assert fresh is not None and doomed not in fresh.segments
+
+
+def test_torn_index_write_treated_as_missing(tmp_path):
+    """A torn (partially written) sidecar must never poison an open: it
+    reads as missing, the index rebuilds, results match a full load."""
+    path = str(tmp_path / "store")
+    store = TuningRecordStore(path)
+    for seq in range(5):
+        store.append(_rec(seq), fingerprint=FP)
+    store.close()
+    TuningRecordStore(path, lazy=True)
+    idx_file = index_path(path)
+    blob = open(idx_file, "rb").read()
+    with open(idx_file, "wb") as f:            # killed mid-write
+        f.write(blob[:len(blob) // 2])
+    assert load_index(path) is None
+    lazy = TuningRecordStore(path, lazy=True)
+    assert _store_view(lazy) == _store_view(TuningRecordStore(path))
+    assert load_index(path) is not None
+
+
+def test_outdated_index_tail_scan_picks_up_appends(tmp_path):
+    """Appends past the indexed frontier (grown segment AND brand-new
+    segment) are NOT staleness — the lazy open scans only those bytes."""
+    path = str(tmp_path / "store")
+    store = TuningRecordStore(path)
+    for seq in range(3):
+        store.append(_rec(seq), fingerprint=FP)
+    store.close()
+    TuningRecordStore(path, lazy=True)         # index frontier: 3 records
+    store = TuningRecordStore(path)            # new segment
+    store.append(_rec(3), fingerprint=FP)
+    store.close()
+    lazy = TuningRecordStore(path, lazy=True)
+    assert len(lazy.records(fp=FP.digest)) == 4
+    assert _store_view(lazy) == _store_view(TuningRecordStore(path))
+
+
+# ---------------------------------------------------------------------------
 # randomized interleavings (hypothesis) — guarded import, NOT importorskip:
 # the deterministic edge-case tests above must run even without hypothesis
 # ---------------------------------------------------------------------------
@@ -142,7 +335,46 @@ if HAVE_HYPOTHESIS:
             seen += _drain(watcher)
             assert seen == list(range(written))
             assert _drain(watcher) == []
+
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(ops=st.lists(st.sampled_from(["write", "poll", "rollover",
+                                         "compact"]),
+                        min_size=1, max_size=40))
+    def test_any_schedule_with_compaction_is_exactly_once_in_order(ops):
+        """ISSUE 5 acceptance property: however compaction interleaves with
+        appends, rollovers, and polls, the tail delivers every record
+        exactly once in write order, and a fresh full load agrees."""
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "store")
+            store = TuningRecordStore(path)
+            watcher = StoreWatcher(path)
+            written, seen = 0, []
+            for op in ops:
+                if op == "write":
+                    store.append(_rec(written), fingerprint=FP)
+                    written += 1
+                elif op == "poll":
+                    seen += _drain(watcher)
+                elif op == "rollover":
+                    store.close()
+                    store = TuningRecordStore(path)
+                else:
+                    compact_store(path)      # retention off: pure folding
+            seen += _drain(watcher)
+            assert seen == list(range(written))
+            assert _drain(watcher) == []
+            assert [int(r.key)
+                    for r in TuningRecordStore(path).records()] \
+                == list(range(written))
+            lazy = TuningRecordStore(path, lazy=True)
+            assert [int(r.key) for r in lazy.records(fp=FP.digest)] \
+                == list(range(written))
 else:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_any_interleaving_delivers_every_record_once_in_order():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_any_schedule_with_compaction_is_exactly_once_in_order():
         pass

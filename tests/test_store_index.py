@@ -1,0 +1,378 @@
+"""Fleet-scale store layer (ISSUE 5): the sidecar segment index behind
+``lazy=True`` opens, compaction/GC retention semantics, the durable
+store-backed retune queue, and the prod-latency quantile satellites.
+
+The invariant everything here leans on: a lazy (indexed) open must answer
+every per-fingerprint query byte-identically to a full load of the same
+cold store, while reading only that fingerprint's extents.
+"""
+import math
+import os
+
+import pytest
+
+from repro.core.searchspace import Param, SearchSpace
+from repro.store import (DriftMonitor, DurableRetuneQueue, SpaceFingerprint,
+                         TuningRecord, TuningRecordStore, compact_store,
+                         latency_summary, load_index, warm_matches)
+
+SPACE = SearchSpace([Param("a", (0, 1, 2, 3)), Param("b", (0, 1, 2))],
+                    name="ix")
+FP_A = SpaceFingerprint.of(SPACE, objective="ix@a")
+FP_B = SpaceFingerprint.of(SPACE, objective="ix@b")
+FP_PROD = SpaceFingerprint.of(SPACE, objective="prod[ix]", context="prod")
+
+
+def _rec(fp, seq, value, t=0.0, run="w", idx=None):
+    idx = seq % SPACE.size if idx is None else idx
+    return TuningRecord(fp=fp.digest, run=run, seq=seq, key=str(seq),
+                        idx=idx, value=value, config=SPACE.config(idx),
+                        t=t)
+
+
+def _fill(path, *, segments=3, per_segment=4):
+    """A multi-segment store interleaving two fingerprints, with an invalid
+    (NaN) record thrown in — the shapes the loader must agree on."""
+    seq = 0
+    for _ in range(segments):
+        store = TuningRecordStore(path)
+        for k in range(per_segment):
+            fp = FP_A if (seq % 3) else FP_B
+            v = math.nan if seq == 5 else 2.0 - 0.01 * seq
+            store.append(_rec(fp, seq, v, t=float(seq)), fingerprint=fp)
+            seq += 1
+        store.close()
+    return seq
+
+
+# ---------------------------------------------------------------------------
+# lazy == full, cold store
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", ["dir", "single"])
+def test_lazy_open_is_byte_identical_to_full_load(tmp_path, layout):
+    path = str(tmp_path / ("store" if layout == "dir" else "store.jsonl"))
+    n = _fill(path, segments=1 if layout == "single" else 3)
+    full = TuningRecordStore(path)
+    lazy = TuningRecordStore(path, lazy=True)
+    assert len(lazy) == len(full) == n
+    assert set(lazy.fingerprints()) == set(full.fingerprints())
+    for fp in (FP_A, FP_B):
+        assert [r.to_json() for r in lazy.records(fp=fp.digest)] \
+            == [r.to_json() for r in full.records(fp=fp.digest)]
+        fb, lb = full.best(fp.digest), lazy.best(fp.digest)
+        assert lb.to_json() == fb.to_json()
+        assert lazy.runs(fp.digest) == full.runs(fp.digest)
+        assert lazy.best_config(fp) == full.best_config(fp)
+    # run-filtered and unfiltered views agree too
+    assert sorted(r.seq for r in lazy.records()) \
+        == sorted(r.seq for r in full.records())
+
+
+def test_lazy_best_ties_resolve_like_full_load(tmp_path):
+    """``best`` returns the FIRST record achieving the minimum; the lazy
+    extent fast path must preserve that across segments."""
+    path = str(tmp_path / "store")
+    for seq, v in enumerate([3.0, 1.5, 1.5, 2.0]):
+        store = TuningRecordStore(path)
+        store.append(_rec(FP_A, seq, v), fingerprint=FP_A)
+        store.close()
+    full, lazy = TuningRecordStore(path), TuningRecordStore(path, lazy=True)
+    assert full.best(FP_A.digest).seq == 1
+    assert lazy.best(FP_A.digest).to_json() == full.best(FP_A.digest).to_json()
+
+
+def test_lazy_open_reads_o_hot_set(tmp_path):
+    """On an indexed store, resolving ONE fingerprint must read far less
+    than the store holds — the index plus that digest's extents."""
+    path = str(tmp_path / "store")
+    store = TuningRecordStore(path)
+    for seq in range(400):
+        store.append(_rec(FP_A, seq, 1.0 + seq), fingerprint=FP_A)
+    for seq in range(400, 420):
+        store.append(_rec(FP_B, seq, 9.0 - 0.01 * seq), fingerprint=FP_B)
+    store.close()
+    TuningRecordStore(path, lazy=True)         # build the sidecar
+    total = sum(os.path.getsize(os.path.join(path, f))
+                for f in os.listdir(path) if f.endswith(".jsonl"))
+    lazy = TuningRecordStore(path, lazy=True)
+    assert lazy.best(FP_B.digest) is not None
+    assert len(lazy.records(fp=FP_B.digest)) == 20
+    assert lazy.bytes_read < total / 5, \
+        f"read {lazy.bytes_read} of {total} segment bytes for the cold cell"
+    full = TuningRecordStore(path)
+    assert full.bytes_read >= total
+
+
+def test_lazy_store_appends_visible_and_not_double_counted(tmp_path):
+    path = str(tmp_path / "store")
+    _fill(path, segments=2)
+    lazy = TuningRecordStore(path, lazy=True)
+    before = len(lazy.records(fp=FP_A.digest))
+    lazy.append(_rec(FP_A, 990, 0.123), fingerprint=FP_A)
+    recs = lazy.records(fp=FP_A.digest)
+    assert len(recs) == before + 1 and recs[-1].seq == 990
+    assert lazy.best(FP_A.digest).value == 0.123
+    # on disk too: a fresh full load agrees exactly
+    lazy.close()
+    full = TuningRecordStore(path)
+    assert [r.to_json() for r in full.records(fp=FP_A.digest)] \
+        == [r.to_json() for r in recs]
+
+
+def test_warm_matches_on_lazy_store_matches_full(tmp_path):
+    """The warm-start path (engine's consumer) over an indexed open."""
+    path = str(tmp_path / "store")
+    _fill(path)
+    full, lazy = TuningRecordStore(path), TuningRecordStore(path, lazy=True)
+    wf = warm_matches(full, FP_A, SPACE)
+    wl = warm_matches(lazy, FP_A, SPACE)
+    assert len(wf) > 0
+    assert [(w.idx, w.value, w.exact, w.noise) for w in wf] \
+        == [(w.idx, w.value, w.exact, w.noise) for w in wl]
+
+
+# ---------------------------------------------------------------------------
+# compaction / GC retention semantics
+# ---------------------------------------------------------------------------
+def test_single_file_store_refuses_compaction(tmp_path):
+    with pytest.raises(ValueError):
+        compact_store(str(tmp_path / "store.jsonl"))
+
+
+def test_compaction_gc_drops_only_superseded_prod_past_retention(tmp_path):
+    path = str(tmp_path / "store")
+    store = TuningRecordStore(path)
+    # tuning records: always kept, whatever their age
+    store.append(_rec(FP_A, 0, 1.0, t=0.0), fingerprint=FP_A)
+    # prod telemetry at idx 1: superseded old, superseded recent, latest
+    for seq, t in ((10, 0.0), (11, 95.0), (12, 100.0)):
+        store.append(_rec(FP_PROD, seq, 0.5, t=t, run="serve", idx=1),
+                     fingerprint=FP_PROD)
+    # prod at idx 2: old but NEVER superseded -> kept
+    store.append(_rec(FP_PROD, 13, 0.7, t=1.0, run="serve", idx=2),
+                 fingerprint=FP_PROD)
+    store.close()
+    store = TuningRecordStore(path)
+    store.append(_rec(FP_A, 1, 2.0, t=110.0), fingerprint=FP_A)  # active seg
+    stats = compact_store(path, retention_s=30.0, now=120.0)
+    assert stats.folded
+    assert stats.dropped_prod == 1          # only seq 10: old AND superseded
+    after = TuningRecordStore(path)
+    assert [r.seq for r in after.records(fp=FP_PROD.digest)] == [11, 12, 13]
+    # resolution over tuning records is untouched
+    assert after.best(FP_A.digest).seq == 0
+    assert len(after.records(fp=FP_A.digest)) == 2
+
+
+def test_compaction_refreshes_sidecar_index(tmp_path):
+    path = str(tmp_path / "store")
+    _fill(path)
+    TuningRecordStore(path, lazy=True)
+    compact_store(path)
+    idx = load_index(path)
+    assert idx is not None
+    assert all(name.startswith("segment-0-") or True
+               for name in idx.segments)
+    lazy = TuningRecordStore(path, lazy=True)
+    full = TuningRecordStore(path)
+    for fp in (FP_A, FP_B):
+        assert [r.to_json() for r in lazy.records(fp=fp.digest)] \
+            == [r.to_json() for r in full.records(fp=fp.digest)]
+
+
+def test_open_lazy_store_survives_concurrent_compaction(tmp_path):
+    """A lazy instance opened before compaction swapped the segments must
+    re-resolve against the rewritten store instead of crashing on the
+    unlinked files."""
+    path = str(tmp_path / "store")
+    _fill(path)
+    lazy = TuningRecordStore(path, lazy=True)
+    full_view = [r.to_json()
+                 for r in TuningRecordStore(path).records(fp=FP_A.digest)]
+    compact_store(path)
+    assert [r.to_json() for r in lazy.records(fp=FP_A.digest)] == full_view
+    assert lazy.best(FP_B.digest) is not None
+
+
+def test_reopen_after_compaction_does_not_double_count_own_appends(tmp_path):
+    """The instance's own (flushed) appends are covered by the re-opened
+    snapshot's disk state: the append-side bookkeeping must reset with the
+    reopen or each own record would be returned twice."""
+    path = str(tmp_path / "store")
+    _fill(path, segments=2)
+    lazy = TuningRecordStore(path, lazy=True)
+    lazy.append(_rec(FP_A, 500, 0.9), fingerprint=FP_A)
+    lazy.append(_rec(FP_A, 501, 0.8), fingerprint=FP_A)
+    compact_store(path)                        # invalidates the snapshot
+    recs = lazy.records(fp=FP_A.digest)        # reopen + retry path
+    assert [r.seq for r in recs].count(500) == 1
+    assert [r.seq for r in recs].count(501) == 1
+    assert [r.to_json() for r in recs] \
+        == [r.to_json()
+            for r in TuningRecordStore(path).records(fp=FP_A.digest)]
+    assert len(lazy) == len(TuningRecordStore(path))
+
+
+def test_lazy_whole_store_records_preserve_global_order(tmp_path):
+    """``records()`` with no digest on a lazy store must return the same
+    interleaved global append order a full load does, not per-digest
+    groups."""
+    path = str(tmp_path / "store")
+    _fill(path)                                # FP_A/FP_B interleaved
+    full = TuningRecordStore(path)
+    lazy = TuningRecordStore(path, lazy=True)
+    assert [r.to_json() for r in lazy.records()] \
+        == [r.to_json() for r in full.records()]
+    assert lazy.runs() == full.runs()
+
+
+# ---------------------------------------------------------------------------
+# durable retune queue
+# ---------------------------------------------------------------------------
+class _Req:
+    def __init__(self, key, t=1.0):
+        self.key, self.objective = key, f"obj[{key}]"
+        self.observed, self.predicted = 2.0, 1.0
+        self.reason, self.t = "drift", t
+
+
+def test_submit_survives_submitter_death_and_claims_once(tmp_path):
+    path = str(tmp_path / "store")
+    producer = DurableRetuneQueue(path, worker="server-1")
+    assert producer.submit(_Req("cell-a"))
+    assert not producer.submit(_Req("cell-a", t=2.0)), "per-cell dedupe"
+    producer.close()
+    del producer                                  # the submitter dies
+
+    daemon1 = DurableRetuneQueue(path, worker="daemon-1")
+    daemon2 = DurableRetuneQueue(path, worker="daemon-2")
+    assert len(daemon1) == 1
+    ticket = daemon1.claim()
+    assert ticket is not None and ticket.key == "cell-a"
+    assert ticket.observed == 2.0 and ticket.predicted == 1.0
+    assert daemon2.claim() is None, "claimed exactly once across daemons"
+    assert daemon1.claim() is None, "no double claim by the winner either"
+
+    daemon1.done(ticket)
+    late = DurableRetuneQueue(path, worker="server-2")
+    assert len(late) == 0
+    assert late.submit(_Req("cell-a", t=3.0)), "cell re-arms after done"
+
+
+def test_claim_expires_after_ttl_and_rearms(tmp_path):
+    path = str(tmp_path / "store")
+    clock = [0.0]
+    q = DurableRetuneQueue(path, worker="daemon-1", claim_ttl=10.0,
+                           clock=lambda: clock[0])
+    assert q.submit(_Req("cell-a"))
+    assert q.claim() is not None
+    # ...daemon dies before done; another daemon polls before/after the TTL
+    q2 = DurableRetuneQueue(path, worker="daemon-2", claim_ttl=10.0,
+                            clock=lambda: clock[0])
+    assert q2.claim() is None, "unexpired claim blocks"
+    clock[0] = 20.0
+    ticket = q2.claim()
+    assert ticket is not None, "expired claim re-arms the request"
+    q2.done(ticket)
+    assert len(q2) == 0
+
+
+def test_resubmit_after_done_at_wall_clock_magnitudes(tmp_path):
+    """Regression: ids minted with %g truncate to 6 significant digits —
+    at wall-clock magnitudes two drifts hours apart collided into one id
+    and the fresh submit folded into the old done ticket, silently."""
+    path = str(tmp_path / "store")
+    clock = [1753710000.0]
+    q = DurableRetuneQueue(path, worker="s1", clock=lambda: clock[0])
+    assert q.submit(_Req("cell-a", t=clock[0]))
+    q.done(q.claim())
+    clock[0] += 400.0                       # same %g bucket as the first
+    assert q.submit(_Req("cell-a", t=clock[0])), \
+        "a fresh drift after done must enqueue, not fold into the old id"
+    assert len(q) == 1
+
+
+def test_dedupe_across_processes_via_store(tmp_path):
+    path = str(tmp_path / "store")
+    a = DurableRetuneQueue(path, worker="server-a")
+    b = DurableRetuneQueue(path, worker="server-b")
+    assert a.submit(_Req("cell-x"))
+    assert not b.submit(_Req("cell-x", t=5.0)), \
+        "a fleet observing one drifted cell collapses to one request"
+    assert b.submit(_Req("cell-y", t=5.0))
+    assert {tk.key for tk in a.open_tickets()} == {"cell-x", "cell-y"}
+
+
+def test_done_coalesces_racing_duplicate_submits(tmp_path):
+    """submit's dedupe is check-then-append: two servers racing within one
+    flush latency CAN both enqueue a cell. Servicing the cell must close
+    every open duplicate — one drift event costs one re-tune."""
+    path = str(tmp_path / "store")
+    a = DurableRetuneQueue(path, worker="server-a")
+    b = DurableRetuneQueue(path, worker="server-b")
+    # forge the race: b submits without ever refreshing over a's record
+    assert a.submit(_Req("cell-x", t=1.0))
+    b._store.append_control({"kind": "retune", "state": "submit",
+                             "id": "cell-x@2/server-b", "key": "cell-x",
+                             "objective": "obj", "observed": 2.0,
+                             "predicted": 1.0, "reason": "drift",
+                             "t": 2.0, "by": "server-b"})
+    daemon = DurableRetuneQueue(path, worker="daemon-1")
+    assert len(daemon) == 2, "the race really produced duplicates"
+    ticket = daemon.claim()
+    daemon.done(ticket)
+    assert len(daemon) == 0, "one service closes every duplicate"
+    assert DurableRetuneQueue(path, worker="daemon-2").claim() is None
+
+
+def test_queue_state_survives_compaction(tmp_path):
+    path = str(tmp_path / "store")
+    q = DurableRetuneQueue(path, worker="server-1")
+    assert q.submit(_Req("cell-open"))
+    done_req = _Req("cell-done", t=0.5)
+    assert q.submit(done_req)
+    tk = None
+    for t in q.open_tickets():
+        if t.key == "cell-done":
+            tk = t
+    q.claim()                      # claims oldest (cell-done, t=0.5)
+    q.done(tk)
+    q.close()
+    store = TuningRecordStore(path)           # force a sealed segment
+    store.append(_rec(FP_A, 0, 1.0), fingerprint=FP_A)
+    store.close()
+    stats = compact_store(path, retention_s=0.0, now=1e12)
+    assert stats.dropped_retune >= 3, "done group folded away"
+    fresh = DurableRetuneQueue(path, worker="daemon-1")
+    assert [tk.key for tk in fresh.open_tickets()] == ["cell-open"], \
+        "open request survives compaction verbatim; done group is gone"
+    assert fresh.claim().key == "cell-open"
+
+
+# ---------------------------------------------------------------------------
+# prod quantile summaries + drift stat (satellites)
+# ---------------------------------------------------------------------------
+def test_latency_summary_quantiles():
+    s = latency_summary([1.0, 2.0, 3.0, 4.0])
+    assert s["p50"] == pytest.approx(2.5)
+    assert s["mean"] == pytest.approx(2.5)
+    assert s["p99"] == pytest.approx(3.97)
+    assert s["n"] == 4
+
+
+def test_drift_monitor_p99_triggers_on_tail_not_median():
+    """A latency tail (1 bad step in 8) moves p99 past the factor while the
+    median stays put: stat="p99" must fire where "median" stays quiet."""
+    window = [1.0] * 7 + [3.0]
+    quiet = DriftMonitor(1.0, factor=1.8, window=8, stat="median")
+    loud = DriftMonitor(1.0, factor=1.8, window=8, stat="p99")
+    fired_quiet = any(quiet.observe(v) for v in window)
+    fired_loud = any(loud.observe(v) for v in window)
+    assert not fired_quiet and fired_loud
+    assert loud.last_p99 > 1.8 > loud.last_median
+    assert loud.last_stat == loud.last_p99
+
+
+def test_drift_monitor_rejects_unknown_stat():
+    with pytest.raises(ValueError):
+        DriftMonitor(1.0, stat="p75")

@@ -48,7 +48,17 @@ def bench_flash():
     emit("kernels/flash_interp_512", us, f"maxerr={err:.2e}")
 
 
-def bench_gp_engines():
+def _tuned_block_n(store, N: int, default: int = 512) -> int:
+    """Tuned matern_gp block size from the kernel-tuning store, when one is
+    present — the nightly bench then exercises the tuned path instead of a
+    hardcoded default."""
+    if store is None:
+        return default
+    from repro.kernels.tuning import tuned_gp_block_n
+    return tuned_gp_block_n(store, N=N, default=default)
+
+
+def bench_gp_engines(store=None):
     """The paper's per-iteration cost: exhaustive posterior over ~18k configs."""
     rng = np.random.default_rng(2)
     N, d, T = 17956, 15, 220
@@ -80,11 +90,26 @@ def bench_gp_engines():
 
     emit("gp/incremental_per_iter", fast_us, f"N={N} T={T}")
     emit("gp/padded_jax_per_iter", jax_us, f"speedup={jax_us / fast_us:.1f}x")
-    save_json("gp_engines", {"fast_us": fast_us, "jax_us": jax_us,
-                             "speedup": jax_us / fast_us})
+    out = {"fast_us": fast_us, "jax_us": jax_us,
+           "speedup": jax_us / fast_us}
+
+    if store is not None:
+        # self-hosted row: the same loop scored through the Pallas kernel
+        # with the store-tuned block_n (DESIGN.md §14)
+        bn = _tuned_block_n(store, N)
+        g_pl = IncrementalGP(Xc, max_obs=T, ell=2.0, backend="pallas",
+                             block_n=bn)
+        for i in range(20):
+            g_pl.add(Xc[rng.integers(N)], float(rng.normal(10, 2)))
+        t0 = time.time()
+        g_pl.predict()
+        pallas_us = (time.time() - t0) * 1e6
+        emit("gp/pallas_backend_per_iter", pallas_us, f"block_n={bn}")
+        out.update({"pallas_us": pallas_us, "pallas_block_n": bn})
+    save_json("gp_engines", out)
 
 
-def bench_matern_kernel():
+def bench_matern_kernel(store=None):
     rng = np.random.default_rng(3)
     N, d, t = 4096, 15, 37
     Xc = rng.random((N, d)).astype(np.float32)
@@ -94,11 +119,13 @@ def bench_matern_kernel():
     x_obs, vinv, w, mask, y_mean, y_std = ops.gp_inputs_from_incremental(g)
     args = (jnp.asarray(Xc), jnp.asarray(x_obs), jnp.asarray(vinv),
             jnp.asarray(w), jnp.asarray(mask))
+    bn = _tuned_block_n(store, N)
     us, (mean_k, _) = _time(lambda: ops.gp_posterior(*args, ell=2.0,
-                                                     block_n=512))
+                                                     block_n=bn))
     mu_i, _ = g.predict()
     err = float(np.max(np.abs(y_mean + y_std * np.asarray(mean_k) - mu_i)))
-    emit("kernels/matern_gp_interp_4k", us, f"vs_engine_err={err:.2e}")
+    emit("kernels/matern_gp_interp_4k", us,
+         f"block_n={bn} vs_engine_err={err:.2e}")
 
 
 def bench_triangular_solve():
@@ -126,13 +153,18 @@ def bench_triangular_solve():
                                    "speedup": gen_us / tri_us})
 
 
-def main(repeats: int = 3) -> None:
+def main(repeats: int = 3, store=None) -> None:
     bench_gemm()
     bench_flash()
-    bench_matern_kernel()
-    bench_gp_engines()
+    bench_matern_kernel(store=store)
+    bench_gp_engines(store=store)
     bench_triangular_solve()
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--store", default=None,
+                    help="kernel-tuning record store; block configs are "
+                         "sourced from it when present")
+    main(store=ap.parse_args().store)

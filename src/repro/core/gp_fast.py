@@ -70,7 +70,11 @@ class IncrementalGP:
 
     def __init__(self, candidates: Optional[np.ndarray], max_obs: int,
                  kernel: str = "matern32", ell: float = 2.0,
-                 noise: float = 1e-6, dim: Optional[int] = None):
+                 noise: float = 1e-6, dim: Optional[int] = None,
+                 backend: str = "numpy", block_n: int = 512,
+                 interpret: Optional[bool] = None):
+        if backend not in ("numpy", "pallas"):
+            raise ValueError(f"backend must be numpy|pallas, got {backend!r}")
         if candidates is None:
             candidates = np.zeros((0, dim), np.float64)
         self.Xc = np.ascontiguousarray(candidates, np.float64)   # (N, d)
@@ -79,6 +83,14 @@ class IncrementalGP:
         self.ell = ell
         self.noise = noise
         self.max_obs = max_obs
+        #: "pallas" routes full-panel/pool posterior scoring through the
+        #: fused repro.kernels.matern_gp TPU kernel — the self-hosting loop
+        #: of DESIGN.md §14; ``block_n`` typically comes from the kernel
+        #: tuning store (repro.kernels.tuning.tuned_gp_block_n). Incremental
+        #: state (add/mark/rollback) is backend-independent.
+        self.backend = backend
+        self.block_n = int(block_n)
+        self.interpret = interpret
         self.L = np.zeros((max_obs, max_obs))
         self.V = np.zeros((max_obs, self.N))
         self.ssq = np.zeros(self.N)
@@ -141,11 +153,35 @@ class IncrementalGP:
         self.y[t] = y_val
         self.t = t + 1
 
+    # -- Pallas-backed posterior scoring (DESIGN.md §14) ----------------------
+    def _predict_pallas(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Score arbitrary points through the fused matern_gp kernel: package
+        the incremental state once (O(t²) triangular solves), stream
+        candidates in ``block_n`` tiles (zero-padded to a tile multiple,
+        pad rows sliced off). Interpret-mode on CPU, real on TPU."""
+        import jax.numpy as jnp
+        from repro.kernels import ops as _kops
+        m = len(X)
+        bn = self.block_n
+        x_obs, vinv, w, mask, y_mean, y_std = \
+            _kops.gp_inputs_from_incremental(self)
+        Xp = np.zeros((m + ((-m) % bn), self.dim), np.float32)
+        Xp[:m] = X
+        mean, var = _kops.gp_posterior(
+            jnp.asarray(Xp), jnp.asarray(x_obs), jnp.asarray(vinv),
+            jnp.asarray(w), jnp.asarray(mask), ell=self.ell, nu=self.kernel,
+            block_n=bn, interpret=self.interpret)
+        mu = y_mean + y_std * np.asarray(mean, np.float64)[:m]
+        sd = np.sqrt(np.asarray(var, np.float64)[:m]) * y_std
+        return mu, sd
+
     # -- posterior over all candidates ----------------------------------------
     def predict(self) -> Tuple[np.ndarray, np.ndarray]:
         t = self.t
         if t == 0:
             return np.zeros(self.N), np.ones(self.N)
+        if self.backend == "pallas" and self.N > 0:
+            return self._predict_pallas(self.Xc)
         yv = self.y[:t]
         y_mean = float(yv.mean())
         y_std = float(yv.std())
@@ -166,6 +202,8 @@ class IncrementalGP:
         t = self.t
         if t == 0:
             return np.zeros(m), np.ones(m)
+        if self.backend == "pallas" and m > 0:
+            return self._predict_pallas(X)
         yv = self.y[:t]
         y_mean = float(yv.mean())
         y_std = float(yv.std())

@@ -60,6 +60,12 @@ class BOConfig:
     # "fast": incremental-Cholesky exact GP (beyond-paper, ~100x less work);
     # "jax": padded jit GP (the oracle; also what the Pallas kernel mirrors)
     engine: str = "fast"
+    # -- self-hosted posterior scoring (DESIGN.md §14) -----------------------
+    # "numpy" | "pallas": fast-engine backend for the §III-G exhaustive
+    # prediction loop; "pallas" runs it through the fused matern_gp kernel,
+    # block_n ideally from the kernel-tuning store (tuned_gp_block_n)
+    gp_backend: str = "numpy"
+    gp_block_n: int = 512
     # -- candidate-pool acquisition (DESIGN.md §10) --------------------------
     pool_mode: str = "auto"               # "auto" | "full" | "pool"
     pool_threshold: int = 100_000         # auto: pool above this many configs
@@ -102,7 +108,9 @@ class _EngineAdapter:
                          ell=ell, noise=cfg.noise)
         else:
             self.gp = IncrementalGP(X_cand, max_obs=max_obs, kernel=cfg.kernel,
-                                    ell=ell, noise=cfg.noise, dim=dim)
+                                    ell=ell, noise=cfg.noise, dim=dim,
+                                    backend=cfg.gp_backend,
+                                    block_n=cfg.gp_block_n)
 
     def add(self, x, y, extra_noise: float = 0.0):
         self.gp.add(x, y, extra_noise)

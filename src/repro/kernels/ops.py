@@ -51,9 +51,10 @@ def gemm_config_space(M: int = 1024, N: int = 1024, K: int = 1024) -> SearchSpac
     return SearchSpace(params, cons, name="pallas_gemm")
 
 
-def gemm_valid(cfg: Dict, dtype_bytes: int = 2) -> bool:
+def gemm_valid(cfg: Dict, dtype_bytes: int = 2,
+               vmem_bytes: int = VMEM_BYTES) -> bool:
     return _gemm.gemm_vmem_bytes(cfg["block_m"], cfg["block_n"],
-                                 cfg["block_k"], dtype_bytes) <= VMEM_BYTES
+                                 cfg["block_k"], dtype_bytes) <= vmem_bytes
 
 
 # -- flash attention -----------------------------------------------------
@@ -76,9 +77,10 @@ def flash_config_space(S: int = 4096) -> SearchSpace:
     return SearchSpace(params, cons, name="pallas_flash")
 
 
-def flash_valid(cfg: Dict, hd: int = 128, dtype_bytes: int = 2) -> bool:
+def flash_valid(cfg: Dict, hd: int = 128, dtype_bytes: int = 2,
+                vmem_bytes: int = VMEM_BYTES) -> bool:
     return _fa.flash_vmem_bytes(cfg["block_q"], cfg["block_kv"], hd,
-                                dtype_bytes) <= VMEM_BYTES
+                                dtype_bytes) <= vmem_bytes
 
 
 # -- Matérn GP posterior ---------------------------------------------------
@@ -95,22 +97,25 @@ def gp_posterior(x_cand, x_obs, vinv_rows, w, mask, ell=2.0, nu="matern32",
 
 def gp_inputs_from_incremental(gp, pad_T: Optional[int] = None):
     """Package an IncrementalGP state as padded kernel inputs."""
+    from repro.core.gp_fast import forward_substitute
+
     t = gp.t
     T = pad_T or max(128, 1 << (t - 1).bit_length())
     d = gp.dim
     x_obs = np.zeros((T, d), np.float32)
     x_obs[:t] = gp.X[:t]
     # invert the Cholesky factor in float64 — GP kernel matrices are
-    # ill-conditioned and an fp32 inverse loses ~1% of the posterior mean
-    L = np.eye(T, dtype=np.float64)
-    L[:t, :t] = gp.L[:t, :t]
-    vinv = np.linalg.inv(L).astype(np.float32)
-    vinv[t:, :] = 0.0
-    vinv[:, t:] = 0.0
+    # ill-conditioned and an fp32 inverse loses ~1% of the posterior mean.
+    # Triangular solve against identity (O(t²) per rhs column), NOT
+    # np.linalg.inv of the full padded factor: the generic inverse is O(T³)
+    # on every packaging call and ignores the triangular structure.
+    vinv = np.zeros((T, T), np.float32)
+    vinv[:t, :t] = forward_substitute(
+        gp.L[:t, :t], np.eye(t, dtype=np.float64)).astype(np.float32)
     yv = gp.y[:t]
     y_mean, y_std = float(yv.mean()), max(float(yv.std()), 1e-12)
     w = np.zeros(T, np.float32)
-    w[:t] = np.linalg.solve(gp.L[:t, :t], (yv - y_mean) / y_std)
+    w[:t] = forward_substitute(gp.L[:t, :t], (yv - y_mean) / y_std)
     mask = np.zeros(T, np.float32)
     mask[:t] = 1.0
     return x_obs, vinv, w, mask, y_mean, y_std
@@ -121,3 +126,10 @@ def gp_config_space(N: int = 16384) -> SearchSpace:
     params = [Param("block_n", vals)]
     return SearchSpace(params, [lambda c: N % c["block_n"] == 0],
                        name="pallas_matern_gp")
+
+
+def gp_valid(cfg: Dict, T: int = 256, d: int = 16,
+             vmem_bytes: int = VMEM_BYTES) -> bool:
+    """VMEM check for the GP-posterior cell (gemm/flash had theirs from the
+    start; ``gp_vmem_bytes`` existed but nothing consumed it)."""
+    return _mgp.gp_vmem_bytes(cfg["block_n"], T, d) <= vmem_bytes

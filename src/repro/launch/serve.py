@@ -28,12 +28,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get_arch, smoke_config
+from repro.kernels.cache import CompiledKernelCache, config_key
 from repro.models.params import init_params
 from repro.models.stepfn import make_decode_step, make_prefill_step
 from repro.parallel.sharding import ParallelConfig, ShardCtx
 from repro.store import (DriftMonitor, HotConfigSource, OnlineServeLoop,
-                         ProdRecorder, apply_sharding_config,
-                         best_sharding_config)
+                         ProdRecorder, apply_kernel_config,
+                         apply_sharding_config, best_sharding_config)
 
 
 def resolve_pcfg(pcfg: ParallelConfig, store: str, arch: str, shape: str,
@@ -58,6 +59,10 @@ class DecodeServer:
     decode batches: it overlays a stored tuning config and re-derives the
     step functions — params, cache, and generated tokens all survive, so a
     swap never costs a restart (only the first step's re-jit).
+    ``apply_kernel_config`` is the same hot-reload point for tuned Pallas
+    block configs (DESIGN.md §14); derived step-fn bundles are memoized in a
+    ``CompiledKernelCache`` keyed by the tunable fields, so swapping BACK to
+    a previously-deployed config is a cache hit — no re-jit at all.
     """
 
     def __init__(self, cfg, pcfg: ParallelConfig, *, batch: int,
@@ -74,18 +79,47 @@ class DecodeServer:
         self.out = []
         self.pos = 0
         self.swaps = 0
+        self.kernel_swaps = 0
+        self.kernel_cache = CompiledKernelCache()
         self._derive()
 
+    def _stepfn_key(self):
+        """Hashable identity of the derived step functions: every tunable
+        ParallelConfig field a store record can overlay, plus the kernel
+        block config. Rule tables are excluded — serving never hot-swaps
+        them (they change the mesh, which IS a restart)."""
+        p = self.pcfg
+        kc = p.kernel
+        kernel = (() if kc is None else
+                  ("flash", kc.use_flash, kc.flash_block_q,
+                   kc.flash_block_kv, kc.interpret))
+        return (p.remat, p.microbatches, p.attn_block_q, p.attn_block_kv,
+                p.attn_q_chunks, p.capacity_factor, p.logits_chunk,
+                p.opt_moment_dtype, p.scan_layers, p.flash_threshold,
+                p.mlstm_chunk, p.mlstm_bf16_streams, p.moe_combine, kernel)
+
     def _derive(self) -> None:
-        px = ShardCtx(mesh=None, pcfg=self.pcfg)
-        self.prefill = jax.jit(make_prefill_step(self.cfg, px,
-                                                 cache_cap=self.cache_cap))
-        self.decode = jax.jit(make_decode_step(self.cfg, px))
+        def build():
+            px = ShardCtx(mesh=None, pcfg=self.pcfg)
+            prefill = jax.jit(make_prefill_step(self.cfg, px,
+                                                cache_cap=self.cache_cap))
+            decode = jax.jit(make_decode_step(self.cfg, px))
+            return prefill, decode
+        self.prefill, self.decode = self.kernel_cache.get(self._stepfn_key(),
+                                                          build)
 
     def apply_config(self, cfg_dict) -> None:
         self.pcfg = apply_sharding_config(self.pcfg, cfg_dict)
         self._derive()
         self.swaps += 1
+
+    def apply_kernel_config(self, cfg_dict) -> None:
+        """Hot-swap tuned Pallas kernel blocks between decode steps: params,
+        KV cache, and generated tokens survive; only the step-fn bundle is
+        re-derived (or re-used from the compiled-kernel cache)."""
+        self.pcfg = apply_kernel_config(self.pcfg, cfg_dict)
+        self._derive()
+        self.kernel_swaps += 1
 
     def input_batch(self):
         cfg, B = self.cfg, self.batch_size
@@ -157,6 +191,11 @@ def main() -> None:
                     choices=["median", "p50", "p99", "mean"],
                     help="window statistic the drift alarm keys off (p99 "
                          "tracks the tail users feel)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="resolve tuned Pallas kernel block configs from "
+                         "--store and dispatch through them (prefill flash "
+                         "attention); in --online mode also tail the store "
+                         "for kernel hot-swaps")
     ap.add_argument("--swap-margin", type=float, default=0.0,
                     help="hot-reload hysteresis: a same-tier better record "
                          "must improve the roofline step time by MORE than "
@@ -187,6 +226,25 @@ def main() -> None:
     elif args.store:
         pcfg = resolve_pcfg(pcfg, args.store, args.arch, args.tuned_shape)
 
+    kernel_source = None
+    if args.kernels and args.store:
+        from repro.kernels import tuning as ktuning
+        hd = cfg.resolved_head_dim
+        kcfg = ktuning.kernel_config_from_store(args.store,
+                                                S=args.prompt_len, hd=hd)
+        if kcfg is None:
+            print("[serve] no usable kernel tuning record in store — "
+                  "pure-JAX kernels")
+        else:
+            print(f"[serve] tuned kernel config from store: {kcfg}")
+            pcfg = pcfg.replace(kernel=kcfg)
+        if args.online:
+            cell = ktuning.flash_cell(args.batch, args.prompt_len,
+                                      cfg.num_heads, hd)
+            kernel_source = HotConfigSource.for_kernel_cell(
+                args.store, cell, swap_margin=args.swap_margin)
+            kernel_source.refresh()
+
     server = DecodeServer(cfg, pcfg, batch=args.batch,
                           prompt_len=args.prompt_len,
                           decode_steps=args.decode_steps, seed=args.seed)
@@ -214,7 +272,8 @@ def main() -> None:
                                monitor=monitor, retune_queue=queue,
                                cell_key=source.objective_id,
                                poll_every=args.poll_every,
-                               first_step_warmup=True)
+                               first_step_warmup=True,
+                               kernel_source=kernel_source)
         t0 = time.time()
         stats = loop.run(args.decode_steps)
         dt = time.time() - t0
@@ -223,6 +282,10 @@ def main() -> None:
         for step, cfg_new, value in stats.swaps:
             print(f"[serve] hot-reload at step {step}: {value:.3f}s "
                   f"roofline {cfg_new}")
+        for step, cfg_new, value in stats.kernel_swaps:
+            print(f"[serve] kernel hot-swap at step {step}: "
+                  f"{value*1e3:.2f} ms step {cfg_new} "
+                  f"(cache {server.kernel_cache.stats()})")
         print(f"[serve] online: {recorder.count} prod records, "
               f"{len(stats.swaps)} hot reloads, "
               f"{stats.retunes_requested} re-tune requests submitted")

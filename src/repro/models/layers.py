@@ -153,6 +153,36 @@ def _flash_attention(q, k, v, *, q_pos, k_pos, window, scale, px: ShardCtx):
     return jnp.concatenate(outs, axis=1)
 
 
+def _pallas_flash_ok(S: int, hd: int, hd_v: int, window, kc) -> bool:
+    """Static preconditions for dispatching the Pallas flash kernel: opted in
+    via KernelConfig, plain causal attention (no local window), equal q/k/v
+    head dims (the kernel streams one (S, hd) layout), and a sequence the
+    tuned blocks tile exactly. Anything else falls back to the pure-JAX
+    paths — dispatch never changes semantics, only the implementation."""
+    return (kc is not None and kc.use_flash and window is None
+            and hd == hd_v and S % kc.flash_block_q == 0
+            and S % kc.flash_block_kv == 0)
+
+
+def _pallas_flash_attention(q, k, v, kc):
+    """GQA-expanded dispatch into the tuned Pallas flash kernel.
+
+    The kernel is an MHA core (its fp32 (m, l, acc) state lives in VMEM and
+    never round-trips through HBM, which the lax.scan formulation above
+    cannot express); GQA feeds it by expanding KV heads to the q head count.
+    Assumes contiguous positions starting at 0 — what train/prefill steps
+    produce; windowed/decode paths never reach here (``_pallas_flash_ok``).
+    """
+    from repro.kernels import ops as kernel_ops
+    G = q.shape[2] // k.shape[2]
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    return kernel_ops.flash_attention(
+        q, k, v, block_q=kc.flash_block_q, block_kv=kc.flash_block_kv,
+        causal=True, interpret=kc.interpret)
+
+
 def _decode_attention(q, k_cache, v_cache, *, cache_pos, cur_pos, window, scale):
     """Single-token attention over a cache. q (B,1,H,hd), cache (B,S,KV,hd).
 
@@ -206,7 +236,9 @@ def gqa_attention(p, x, *, cfg: ArchConfig, px: ShardCtx, mode: str,
     else:
         q_pos = positions
         k_pos = positions
-        if S >= px.pcfg.flash_threshold:
+        if _pallas_flash_ok(S, hd, v.shape[-1], window, px.pcfg.kernel):
+            out = _pallas_flash_attention(q, k, v, px.pcfg.kernel)
+        elif S >= px.pcfg.flash_threshold:
             out = _flash_attention(q, k, v, q_pos=q_pos, k_pos=k_pos,
                                    window=window, scale=scale, px=px)
         else:
@@ -320,7 +352,11 @@ def mla_attention(p, x, *, cfg: ArchConfig, px: ShardCtx, mode: str,
     k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
     k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
-    if S >= px.pcfg.flash_threshold:
+    if _pallas_flash_ok(S, dn + dr, dv, None, px.pcfg.kernel):
+        # MLA head dims rarely line up (dn+dr != dv); when they do the
+        # tuned kernel applies unchanged — scale is 1/sqrt(q head dim)
+        out = _pallas_flash_attention(q_full, k_full, v, px.pcfg.kernel)
+    elif S >= px.pcfg.flash_threshold:
         out = _flash_attention(q_full, k_full, v, q_pos=positions, k_pos=positions,
                                window=None, scale=scale, px=px)
     else:

@@ -2,6 +2,15 @@
 
 These are the functions the launcher jits and the dry-run lowers. They are
 pure; distribution comes from input shardings + internal constraints.
+
+Kernel dispatch (DESIGN.md §14): when ``px.pcfg.kernel`` is set, the
+attention layers these steps trace route train/prefill attention through
+the tuned Pallas flash kernel (``models/layers.py::_pallas_flash_ok``
+gates it statically, so the choice is baked into the jitted step — a
+kernel hot-swap means re-deriving the step fns, which
+``launch/serve.py::DecodeServer`` memoizes in its compiled-kernel cache).
+With ``kernel=None`` (the default) every path is pure-JAX and
+byte-identical to pre-§14 traces.
 """
 from __future__ import annotations
 

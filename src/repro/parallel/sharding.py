@@ -48,6 +48,27 @@ DEFAULT_ACT_RULES: Dict[str, Axis] = {
 
 
 @dataclass(frozen=True)
+class KernelConfig:
+    """Tuned Pallas-kernel dispatch knobs (DESIGN.md §14).
+
+    ``ParallelConfig.kernel is None`` (the default) keeps every model path on
+    the pure-JAX implementations — byte-identical to pre-kernel-tuning
+    behavior. Block sizes come from the kernel-tuning cells in
+    ``repro.kernels.tuning`` (same store/engine machinery as sharding
+    configs); ``interpret=None`` auto-selects interpret mode off-TPU, which
+    is what makes the dispatch testable on CPU.
+    """
+
+    use_flash: bool = False          # Pallas flash_attention on train/prefill
+    flash_block_q: int = 512
+    flash_block_kv: int = 512
+    interpret: Optional[bool] = None  # None = auto (interpret off-TPU)
+
+    def replace(self, **kw) -> "KernelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class ParallelConfig:
     """Distribution + performance knobs. Every field is BO-tunable."""
 
@@ -69,6 +90,8 @@ class ParallelConfig:
     mlstm_chunk: int = 0
     mlstm_bf16_streams: bool = False  # bf16 intra-chunk streams (state fp32)
     moe_combine: str = "gather"       # gather | a2a (axis-swap reshard)
+    # tuned Pallas-kernel dispatch; None = pure-JAX paths (byte-identical)
+    kernel: Optional[KernelConfig] = None
 
     def replace(self, **kw) -> "ParallelConfig":
         return dataclasses.replace(self, **kw)

@@ -12,8 +12,8 @@ from repro.store.records import (SpaceFingerprint, TuningRecord,
 from repro.store.transfer import warm_matches
 from repro.store.migrate import (ingest_golden, is_legacy_checkpoint,
                                  migrate_checkpoint)
-from repro.store.resolve import (apply_sharding_config, best_sharding_config,
-                                 cell_objective)
+from repro.store.resolve import (apply_kernel_config, apply_sharding_config,
+                                 best_sharding_config, cell_objective)
 from repro.store.watch import (DriftMonitor, HotConfigSource, OnlineServeLoop,
                                ProdRecorder, ServeStats, StoreWatcher,
                                latency_summary, prod_objective)
@@ -24,7 +24,8 @@ from repro.store.queue import DurableRetuneQueue, RetuneTicket
 
 __all__ = ["SpaceFingerprint", "TuningRecord", "TuningRecordStore",
            "warm_matches", "ingest_golden", "is_legacy_checkpoint",
-           "migrate_checkpoint", "apply_sharding_config",
+           "migrate_checkpoint", "apply_kernel_config",
+           "apply_sharding_config",
            "best_sharding_config", "cell_objective", "prod_objective",
            "StoreWatcher", "HotConfigSource", "ProdRecorder", "DriftMonitor",
            "OnlineServeLoop", "ServeStats", "latency_summary",

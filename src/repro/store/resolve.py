@@ -64,3 +64,18 @@ def apply_sharding_config(pcfg, cfg: Dict[str, Any]):
         # flash=1: blockwise attention always on; flash=0: never
         kw["flash_threshold"] = 0 if cfg["flash"] else 1 << 30
     return pcfg.replace(**kw)
+
+
+def apply_kernel_config(pcfg, cfg: Dict[str, Any]):
+    """Overlay a stored *kernel-cell* block config (DESIGN.md §14) onto a
+    ParallelConfig as a ``KernelConfig``. Flash-cell keys (``block_q``/
+    ``block_kv``) enable Pallas flash dispatch; a config carrying neither
+    (e.g. a gemm cell's) leaves the kernel field untouched."""
+    from repro.parallel.sharding import KernelConfig
+    if "block_q" not in cfg and "block_kv" not in cfg:
+        return pcfg
+    base = pcfg.kernel or KernelConfig()
+    return pcfg.replace(kernel=base.replace(
+        use_flash=True,
+        flash_block_q=int(cfg.get("block_q", base.flash_block_q)),
+        flash_block_kv=int(cfg.get("block_kv", base.flash_block_kv))))

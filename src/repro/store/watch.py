@@ -235,10 +235,12 @@ class HotConfigSource:
 
     def __init__(self, path: str, arch: str, shape: str,
                  mesh: str = "single", *, wide: bool = False,
-                 swap_margin: float = 0.0):
-        from repro.core.tuning_targets import sharding_space
-        space = sharding_space(arch, shape, wide=wide)
-        self.objective_id = cell_objective(arch, shape, mesh)
+                 swap_margin: float = 0.0, space=None,
+                 objective_id: Optional[str] = None):
+        if space is None:
+            from repro.core.tuning_targets import sharding_space
+            space = sharding_space(arch, shape, wide=wide)
+        self.objective_id = objective_id or cell_objective(arch, shape, mesh)
         self.fp = SpaceFingerprint.of(space, objective=self.objective_id)
         self.watcher = StoreWatcher(path, from_start=True)
         #: swap hysteresis (seconds of roofline step time): a same-tier
@@ -249,6 +251,18 @@ class HotConfigSource:
         self._best_cross: Optional[Tuple[Dict[str, Any], float]] = None
         self.current: Optional[Tuple[Dict[str, Any], float]] = None
         self._current_tier = 1        # 0 = exact fingerprint, 1 = fallback
+
+    @classmethod
+    def for_kernel_cell(cls, path: str, cell, *,
+                        device: Optional[str] = None,
+                        swap_margin: float = 0.0) -> "HotConfigSource":
+        """A live source over a kernel-tuning cell (DESIGN.md §14): same
+        tier/hysteresis semantics as sharding cells, keyed under the cell's
+        ``kernel[name×shape×device]`` objective id. ``cell`` is a
+        ``repro.kernels.tuning.KernelCell``."""
+        return cls(path, "", "", space=cell.space,
+                   objective_id=cell.objective_id(device),
+                   swap_margin=swap_margin)
 
     def _fold(self, rec: TuningRecord) -> None:
         if rec.config is None or not math.isfinite(rec.value):
@@ -445,6 +459,8 @@ class ServeStats:
     latencies: List[float] = field(default_factory=list)
     swaps: List[Tuple[int, Dict[str, Any], float]] = field(
         default_factory=list)          # (global step, config, roofline value)
+    kernel_swaps: List[Tuple[int, Dict[str, Any], float]] = field(
+        default_factory=list)          # (global step, block config, step time)
     retunes_requested: int = 0
 
 
@@ -467,9 +483,11 @@ class OnlineServeLoop:
                  monitor: Optional[DriftMonitor] = None,
                  retune_queue=None, cell_key: str = "",
                  poll_every: int = 1, clock=time.time,
-                 first_step_warmup: bool = False):
+                 first_step_warmup: bool = False,
+                 kernel_source: Optional[HotConfigSource] = None):
         self.server = server
         self.source = source
+        self.kernel_source = kernel_source
         self.recorder = recorder
         self.monitor = monitor
         self.retune_queue = retune_queue
@@ -504,11 +522,29 @@ class OnlineServeLoop:
             self.monitor.rebase(value)
         stats.swaps.append((self.step, dict(cfg), value))
 
+    def _maybe_swap_kernel(self, stats: ServeStats) -> None:
+        """Kernel hot-swap mirrors the sharding one (same tier/margin
+        hysteresis inside the source) but does NOT rebase the drift monitor:
+        the roofline prediction judges the *sharding* config, and a kernel
+        block change doesn't invalidate it."""
+        hit = (self.kernel_source.refresh()
+               if self.kernel_source is not None else None)
+        if hit is None:
+            return
+        cfg, value = hit
+        apply = getattr(self.server, "apply_kernel_config", None)
+        if apply is None:
+            return       # data plane has no kernel dispatch (e.g. old stub)
+        apply(cfg)
+        self._warmup = True        # first post-swap step pays the re-jit
+        stats.kernel_swaps.append((self.step, dict(cfg), value))
+
     def run(self, steps: int) -> ServeStats:
         stats = ServeStats()
         for _ in range(int(steps)):
             if self.step % self.poll_every == 0:
                 self._maybe_swap(stats)
+                self._maybe_swap_kernel(stats)
             dt = self.server.decode_step()
             stats.steps += 1
             stats.latencies.append(dt)

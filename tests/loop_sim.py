@@ -26,11 +26,16 @@ import numpy as np
 
 from repro.core.objectives import SimulatedObjective
 from repro.core.tuning_targets import sharding_space
+from repro.kernels.cache import config_key
 from repro.store import (DriftMonitor, HotConfigSource, OnlineServeLoop,
                          ProdRecorder, SpaceFingerprint, TuningRecord,
                          TuningRecordStore, cell_objective)
 
 ARCH, SHAPE, MESH = "internlm2-1.8b", "decode_32k", "single"
+#: simulated kernel-cell objective id (DESIGN.md §14) — same string shape as
+#: repro.kernels.tuning.kernel_cell_objective, device pinned to "sim" so the
+#: harness stays jax-free
+KERNEL_OBJECTIVE_ID = "kernel[flash×sim×sim]"
 
 
 class VirtualClock:
@@ -74,12 +79,28 @@ class StubDecodeServer:
         self.drift_scale = 1.0
         self.config = None
         self.applied = []            # every hot-swap, in order
+        self.kernel_config = None
+        self.kernel_applied = []     # every kernel hot-swap, in order
         self.restarts = 0            # never incremented: swaps don't restart
         self.steps = 0
+        self.derives = 0             # distinct step-fn derivations (re-jits)
+        self._derived = set()        # mimics DecodeServer's kernel cache
+
+    def _derive(self) -> None:
+        key = (config_key(self.config), config_key(self.kernel_config))
+        if key not in self._derived:
+            self._derived.add(key)
+            self.derives += 1        # a repeat key is a compiled-cache hit
 
     def apply_config(self, cfg) -> None:
         self.config = dict(cfg)
         self.applied.append(dict(cfg))
+        self._derive()
+
+    def apply_kernel_config(self, cfg) -> None:
+        self.kernel_config = dict(cfg)
+        self.kernel_applied.append(dict(cfg))
+        self._derive()
 
     def decode_step(self) -> float:
         base = (self.latency_of(self.config) if self.config is not None
@@ -99,7 +120,8 @@ class LoopSim:
                  drift_factor: float = 1.5, drift_window: int = 4,
                  drift_stat: str = "median", poll_every: int = 1,
                  surface_seed: int = 0, swap_margin: float = 0.0,
-                 durable_queue: bool = False):
+                 durable_queue: bool = False, kernel_cell: bool = False,
+                 kernel_swap_margin: float = 0.0):
         self.clock = VirtualClock()
         self.space = sharding_space(arch, shape)
         self.times = cell_surface(self.space, seed=surface_seed)
@@ -126,11 +148,27 @@ class LoopSim:
         else:
             from repro.core.engine import RetuneQueue
             self.queue = RetuneQueue()
+        self.kernel_source = None
+        if kernel_cell:
+            # a simulated flash kernel cell sharing the store: same grids as
+            # ops.flash_config_space, jax-free
+            from repro.core.searchspace import Param, SearchSpace
+            self.kernel_space = SearchSpace(
+                [Param("block_q", (128, 256, 512)),
+                 Param("block_kv", (128, 256, 512))], name="pallas_flash")
+            self.kernel_times = cell_surface(self.kernel_space,
+                                             seed=surface_seed + 7)
+            self.kernel_fp = SpaceFingerprint.of(
+                self.kernel_space, objective=KERNEL_OBJECTIVE_ID)
+            self.kernel_source = HotConfigSource(
+                store_path, "", "", space=self.kernel_space,
+                objective_id=KERNEL_OBJECTIVE_ID,
+                swap_margin=kernel_swap_margin)
         self.loop = OnlineServeLoop(
             self.server, self.source, recorder=self.recorder,
             monitor=self.monitor, retune_queue=self.queue,
             cell_key=self.objective_id, poll_every=poll_every,
-            clock=self.clock)
+            clock=self.clock, kernel_source=self.kernel_source)
         self._tuner_seq = 0
 
     def _latency_of(self, config) -> float:
@@ -147,6 +185,17 @@ class LoopSim:
             key=str(int(idx)), idx=int(idx), value=float(self.times[idx]),
             config=self.space.config(int(idx)), t=self.clock()),
             fingerprint=self.fp)
+        self._tuner_seq += 1
+
+    def append_kernel_record(self, idx: int, run: str = "sim-ktune") -> None:
+        """A kernel tuner lands one measured block-config step time for the
+        simulated flash cell (requires ``kernel_cell=True``)."""
+        self.store.append(TuningRecord(
+            fp=self.kernel_fp.digest, run=run, seq=self._tuner_seq,
+            key=str(int(idx)), idx=int(idx),
+            value=float(self.kernel_times[idx]),
+            config=self.kernel_space.config(int(idx)), t=self.clock()),
+            fingerprint=self.kernel_fp)
         self._tuner_seq += 1
 
     def seal_segment(self) -> None:

@@ -349,3 +349,67 @@ def test_loop_sim_smoke():
     assert clock() == 0.0
     clock.advance(1.5)
     assert clock() == 1.5
+
+
+def test_mid_serve_kernel_hot_swap_no_restart_no_spurious_rejit(tmp_path):
+    """DESIGN.md §14 acceptance: a kernel tuner landing a block config
+    mid-serve hot-swaps the running server's kernels between decode steps —
+    no restart — and swap-margin hysteresis keeps a sub-margin improvement
+    from triggering a spurious re-jit."""
+    sim = LoopSim(str(tmp_path / "store"), kernel_cell=True)
+    ranked = np.argsort(sim.kernel_times, kind="stable")
+    best, second, third = int(ranked[0]), int(ranked[1]), int(ranked[2])
+    t = sim.kernel_times
+    # margin swallows third->second but not third->best
+    margin = float(t[third] - t[second]) + 1e-9
+    assert t[third] - t[best] > margin
+    sim.kernel_source.swap_margin = margin
+
+    # cold store: no kernel swap, pure-default kernels
+    stats = sim.serve(3)
+    assert sim.server.kernel_applied == [] and stats.kernel_swaps == []
+
+    # a kernel record lands mid-serve: swap at the next poll, no restart,
+    # params/cache survive (the stub counts restarts; must stay 0)
+    sim.append_kernel_record(third)
+    stats = sim.serve(4)
+    assert len(stats.kernel_swaps) == 1
+    assert sim.server.kernel_applied == [sim.kernel_space.config(third)]
+    assert sim.server.restarts == 0
+    assert sim.server.kernel_config == sim.kernel_space.config(third)
+    derives_after_swap = sim.server.derives
+
+    # sub-margin improvement: no swap, no re-derive (no spurious re-jit)
+    sim.append_kernel_record(second)
+    stats = sim.serve(4)
+    assert stats.kernel_swaps == []
+    assert len(sim.server.kernel_applied) == 1
+    assert sim.server.derives == derives_after_swap
+
+    # past-margin improvement: swaps, still restart-free
+    sim.append_kernel_record(best)
+    stats = sim.serve(4)
+    assert len(stats.kernel_swaps) == 1
+    assert sim.server.kernel_config == sim.kernel_space.config(best)
+    assert sim.server.restarts == 0
+    assert sim.server.derives == derives_after_swap + 1
+
+
+def test_kernel_swap_does_not_disturb_sharding_loop(tmp_path):
+    """Kernel and sharding sources share the store but are independent
+    cells: a kernel record never wins the sharding resolution (different
+    objective id), a kernel swap doesn't rebase the drift monitor, and the
+    post-swap warmup step is excluded from telemetry exactly once."""
+    sim = LoopSim(str(tmp_path / "store"), kernel_cell=True)
+    sharding_idx = int(sim.ranked_indices()[3])
+    sim.append_tuning_record(sharding_idx)
+    sim.append_kernel_record(int(np.argmin(sim.kernel_times)))
+    stats = sim.serve(6)
+    assert len(stats.swaps) == 1 and len(stats.kernel_swaps) == 1
+    assert sim.server.config == sim.space.config(sharding_idx)
+    # drift monitor judges the SHARDING roofline, untouched by kernel swaps
+    assert sim.monitor.predicted == pytest.approx(
+        float(sim.times[sharding_idx]))
+    # both swaps happened at step 0's poll -> one warmup step total was
+    # withheld from prod telemetry
+    assert sim.recorder.count == stats.steps - 1

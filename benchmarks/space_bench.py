@@ -12,9 +12,15 @@ space size this measures
     on-demand latency above that, against the seed's tuple-dict probes;
   * config lookup (index_of) via sorted mixed-radix codes.
 
+The generative backend (DESIGN.md §15) gets its own rows: construction
+time, time-to-first-feasible-sample, feasible-walk neighbor latency, and
+resident bytes against the enumerated twin at 10^7 cartesian (acceptance:
+>=100x lighter) plus construction-only rows at 10^9+ where enumeration is
+impossible (acceptance: sub-second).
+
 Results land in results/bench/space_scaling.json.
 
-  PYTHONPATH=src python -m benchmarks.space_bench [--small]
+  PYTHONPATH=src python -m benchmarks.space_bench [--smoke]
   PYTHONPATH=src python -m benchmarks.run --only space
 """
 from __future__ import annotations
@@ -27,7 +33,8 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, save_json
-from repro.core.searchspace import Param, SearchSpace, VectorConstraint
+from repro.core.searchspace import (GenerativeSpace, Param, SearchSpace,
+                                    VectorConstraint)
 
 #: (values per param, params, constrained): cartesian grows from CI-smoke to
 #: the 10^7 bar. The final unconstrained row keeps all 10^7 configs, which
@@ -36,6 +43,13 @@ from repro.core.searchspace import Param, SearchSpace, VectorConstraint
 GRID_SMALL = [(10, 4, True), (18, 4, True)]              # 1.0e4, 1.05e5
 GRID_FULL = GRID_SMALL + [(32, 4, True), (8, 8, True),   # + 1.05e6, 1.68e7
                           (10, 7, False)]                # + 1.0e7 kept (lazy)
+#: generative-backend rows (DESIGN.md §15). The (10, 7, False) twin pairs
+#: with the enumerated 1e7 row above for the resident-bytes comparison; the
+#: 10^9 / 10^12 rows are construction+sampling only — enumeration there is
+#: physically impossible, which is the point.
+GEN_GRID_SMOKE = [(18, 4, True), (10, 7, False)]         # 1.05e5, 1.0e7
+GEN_GRID_FULL = GEN_GRID_SMOKE + [(32, 6, True),         # + 1.07e9
+                                  (100, 6, True)]        # + 1.0e12
 REFERENCE_MAX = 1_050_000                        # python loop above: minutes
 N_NEIGHBOR_QUERIES = 512
 
@@ -112,7 +126,8 @@ def main(repeats: int = 0, *, small: bool = False) -> None:
                "x_norm_mode": "lazy" if space.x_norm_lazy else "eager",
                "x_norm_resident_bytes": (0 if space.x_norm_lazy
                                          else space.X_norm.nbytes),
-               "x_norm_eager_equiv_bytes": space.size * space.dim * 4}
+               "x_norm_eager_equiv_bytes": space.size * space.dim * 4,
+               "resident_bytes": space.resident_bytes}
         if space.x_norm_lazy:
             # the candidate-pool access pattern: gather a pool of rows +
             # snap LHS points, all without materializing (N, d)
@@ -169,21 +184,98 @@ def main(repeats: int = 0, *, small: bool = False) -> None:
         emit(f"space/neighbors_{space.cartesian_size}", q_s * 1e6,
              row["neighbor_index"])
 
+    # -- generative backend (DESIGN.md §15): no enumeration at any size -----
+    gen_rows = []
+    for k, d, constrained in (GEN_GRID_SMOKE if small else GEN_GRID_FULL):
+        params = _params(k, d)
+        cons = ([VectorConstraint(fn) for fn in _constraint_fns(k)]
+                if constrained else [])
+        t0 = time.perf_counter()
+        space = GenerativeSpace(params, cons, name=f"gen_{k}x{d}")
+        t_construct = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        first = int(space.sample_feasible(rng, 1)[0])
+        t_first = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        batch = space.sample_feasible(rng, 256)
+        t_batch = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        strata = space.stratified_feasible(rng, 256)
+        t_strata = time.perf_counter() - t0
+        # feasible-walk neighbor queries on sampled incumbents (cold, then
+        # the memo-hit repeat a local search actually pays)
+        probes = [int(g) for g in batch[:64]] or [first]
+        t0 = time.perf_counter()
+        for g in probes:
+            space.hamming_neighbors(g)
+        t_nbr = (time.perf_counter() - t0) / len(probes)
+        t0 = time.perf_counter()
+        for g in probes:
+            space.hamming_neighbors(g)
+        t_nbr_cached = (time.perf_counter() - t0) / len(probes)
+        cfgs = [space.config(int(g)) for g in strata[:128]]
+        t0 = time.perf_counter()
+        for cfg, g in zip(cfgs, strata):
+            assert space.index_of(cfg) == int(g)
+        t_lookup = (time.perf_counter() - t0) / len(cfgs)
+        row = {"cartesian": space.cartesian_size, "params": d,
+               "values_per_param": k, "constrained_grid": constrained,
+               "construct_s": t_construct,
+               "first_feasible_sample_s": t_first,
+               "sample_256_s": t_batch, "stratified_256_s": t_strata,
+               "neighbor_walk_s": t_nbr,
+               "neighbor_walk_cached_s": t_nbr_cached,
+               "index_of_s": t_lookup,
+               "resident_bytes": space.resident_bytes,
+               "accept_rate_ewma": space._accept_ewma}
+        gen_rows.append(row)
+        emit(f"space/generative_construct_{space.cartesian_size}",
+             t_construct * 1e6, f"{space.resident_bytes}B resident")
+        emit(f"space/generative_first_sample_{space.cartesian_size}",
+             t_first * 1e6, f"accept~{space._accept_ewma:.2f}")
+
     biggest = rows[-1]
-    payload = {"rows": rows,
-               "acceptance": {
-                   "cartesian": biggest["cartesian"],
-                   "enumerate_s": biggest["enumerate_s"],
-                   "meets_1e7_in_seconds": (biggest["cartesian"] >= 10_000_000
-                                            and biggest["enumerate_s"] < 30.0)
-                   if not small else None}}
+    acceptance = {
+        "cartesian": biggest["cartesian"],
+        "enumerate_s": biggest["enumerate_s"],
+        "meets_1e7_in_seconds": (biggest["cartesian"] >= 10_000_000
+                                 and biggest["enumerate_s"] < 30.0)
+        if not small else None}
+    # §15 acceptance: >=100x lighter than the enumerated twin at 1e7, and
+    # 10^9+ grids must construct in well under a second
+    twins = {r["cartesian"]: r for r in rows}
+    for g in gen_rows:
+        twin = twins.get(g["cartesian"])
+        if twin is not None:
+            g["resident_ratio_vs_enumerated"] = (
+                twin["resident_bytes"] / max(g["resident_bytes"], 1))
+    at_1e7 = [g for g in gen_rows
+              if g["cartesian"] >= 10_000_000
+              and "resident_ratio_vs_enumerated" in g]
+    huge = [g for g in gen_rows if g["cartesian"] >= 10 ** 9]
+    acceptance["generative_resident_ratio_1e7"] = (
+        min(g["resident_ratio_vs_enumerated"] for g in at_1e7)
+        if at_1e7 else None)
+    acceptance["generative_meets_100x_at_1e7"] = (
+        acceptance["generative_resident_ratio_1e7"] is not None
+        and acceptance["generative_resident_ratio_1e7"] >= 100.0)
+    acceptance["generative_construct_1e9_s"] = (
+        max(g["construct_s"] for g in huge) if huge else None)
+    acceptance["generative_subsecond_at_1e9"] = (
+        (acceptance["generative_construct_1e9_s"] is not None
+         and acceptance["generative_construct_1e9_s"] < 1.0)
+        if not small else None)
+
+    payload = {"rows": rows, "generative_rows": gen_rows,
+               "acceptance": acceptance}
     path = save_json("space_scaling", payload)
     print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--small", action="store_true",
-                    help="CI smoke grid (cartesian <= ~1e5)")
+    ap.add_argument("--smoke", "--small", dest="smoke", action="store_true",
+                    help="CI smoke grid (enumerated cartesian <= ~1e5, "
+                         "generative <= 1e7)")
     args = ap.parse_args()
-    main(small=args.small)
+    main(small=args.smoke)

@@ -10,14 +10,16 @@ the config doesn't compile or doesn't fit HBM. This is the paper's problem
   PYTHONPATH=src python examples/tune_sharding.py \
       --arch internlm2-1.8b --shape train_4k --budget 10
 
-``--wide`` opens the full chunk-size grids (>2M cartesian configurations for
-MoE cells, enumerated in seconds by the vectorized constraint layer) and BO
-automatically switches to candidate-pool acquisition: each iteration scores
-a pool of incumbent neighborhoods + stratified draws instead of the whole
-space.
+``--wide`` opens the full chunk-size grids and BO automatically switches to
+candidate-pool acquisition: each iteration scores a pool of incumbent
+neighborhoods + stratified draws instead of the whole space. Past
+``max_enumeration`` (the 10^9+ MoE grids of deepseek-v3-671b) the space
+silently becomes the generative backend (DESIGN.md §15) — constructed in
+milliseconds, nothing enumerated, feasible configs drawn straight from the
+constraints.
 
   PYTHONPATH=src python examples/tune_sharding.py \
-      --arch qwen3-moe-30b-a3b --shape train_4k --budget 10 --wide
+      --arch deepseek-v3-671b --shape train_4k --budget 10 --wide
 """
 import argparse
 import os
@@ -66,13 +68,15 @@ def main():
 
     cfg = BOConfig(acquisition=args.strategy, initial_samples=args.init)
     strat = BOStrategy(cfg)
-    if cfg.pool_active(obj.space.size):
+    if cfg.pool_active(obj.space.size) or obj.space.generative:
         # incumbent Hamming neighborhoods + stratified draws (+ LHS refresh)
         n_nbrs = sum(len(p.values) - 1 for p in obj.space.params)
         per_round = (cfg.pool_size + cfg.pool_incumbents * n_nbrs
                      + cfg.pool_lhs_points)
+        backend = ("generative feasible draws" if obj.space.generative
+                   else "the restricted space")
         print(f"\ncandidate-pool acquisition: ~{per_round:,} configs scored "
-              f"per iteration vs {obj.space.size:,} in the restricted space "
+              f"per iteration via {backend} "
               f"(cartesian {obj.space.cartesian_size:,})")
     else:
         print(f"\nfull-space acquisition: all {obj.space.size:,} configs "

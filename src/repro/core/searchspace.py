@@ -21,6 +21,16 @@ Config lookup runs on the sorted mixed-radix code array (binary search, no
 per-row tuple dict), and Hamming/adjacent neighborhoods are served from a
 lazily built CSR index (or computed per row, vectorized, above
 ``csr_build_max`` configs).
+
+Beyond enumeration (DESIGN.md §15): a space whose Cartesian product exceeds
+``max_enumeration`` is constructed as a ``GenerativeSpace`` — the same API
+surface with NO materialized codes, value-index table, or X_norm. Config
+identity is the mixed-radix code itself, feasible samples come from
+constraint-propagating rejection draws (declaration-order short-circuit
+preserved), neighborhoods are feasible walks validity-checked per candidate
+and memoized like the partial-CSR frontier, and nearest-point queries round
+per-dimension (exact when the rounded config is feasible) with a
+deterministic feasible anchor-sample fallback. Construction is O(d).
 """
 from __future__ import annotations
 
@@ -123,7 +133,36 @@ class LazyNorm:
 
 
 class SearchSpace:
-    """Enumerated constrained space with ordinal-normalized coordinates."""
+    """Enumerated constrained space with ordinal-normalized coordinates.
+
+    When the Cartesian product exceeds ``max_enumeration``,
+    ``SearchSpace(...)`` transparently constructs a :class:`GenerativeSpace`
+    instead of raising — the non-enumerative backend behind the same API
+    (DESIGN.md §15). Explicit subclasses are never redirected.
+    """
+
+    #: True on the generative backend; consumers that need dense-position
+    #: semantics (e.g. full-space acquisition) branch on this.
+    generative = False
+
+    def __new__(cls, *args, **kwargs):
+        if cls is SearchSpace and (args or "params" in kwargs):
+            params = kwargs.get("params", args[0] if args else ())
+            max_enum = kwargs.get("max_enumeration")
+            if max_enum is None and len(args) >= 4:
+                max_enum = args[3]
+            if max_enum is None:
+                max_enum = DEFAULT_MAX_ENUMERATION
+            try:
+                cart = math.prod(len(p.values) for p in params)
+            except (TypeError, AttributeError):
+                cart = 0
+            if cart > max_enum:
+                # too large to enumerate: fall through to the generative
+                # backend (Python then runs GenerativeSpace.__init__ with
+                # the same arguments)
+                return super().__new__(GenerativeSpace)
+        return super().__new__(cls)
 
     def __init__(self, params: Sequence[Param],
                  constraints: Sequence[Constraint] = (),
@@ -133,6 +172,34 @@ class SearchSpace:
                  csr_build_max: int = CSR_BUILD_MAX,
                  x_norm_lazy_min: int = X_NORM_LAZY_MIN,
                  neighbor_cache_max: int = NEIGHBOR_CACHE_MAX):
+        cart = self._init_radix(params, constraints, name,
+                                csr_build_max=csr_build_max,
+                                x_norm_lazy_min=x_norm_lazy_min,
+                                neighbor_cache_max=neighbor_cache_max)
+        if cart > max_enumeration:
+            raise ValueError(f"{name}: cartesian product {cart} too large to enumerate")
+        self.cartesian_size = cart
+
+        idx, codes = self._enumerate(chunk_size)
+        self.value_indices = idx                     # (N, d) int32
+        self._codes = codes                          # (N,) int64, ascending
+        self.size = len(idx)
+        if self.size == 0:
+            raise ValueError(f"{name}: all configurations violate constraints")
+
+        self._set_x_norm()
+        self._h_csr: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._a_csr: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._row_sq: Optional[np.ndarray] = None   # lazy ||X_norm||² cache
+        self._nbr_cache: Dict[Tuple[str, int], np.ndarray] = {}
+
+    def _init_radix(self, params: Sequence[Param],
+                    constraints: Sequence[Constraint], name: str, *,
+                    csr_build_max: int = CSR_BUILD_MAX,
+                    x_norm_lazy_min: int = X_NORM_LAZY_MIN,
+                    neighbor_cache_max: int = NEIGHBOR_CACHE_MAX) -> int:
+        """Backend-independent setup (params, mixed-radix strides, value
+        columns, normalization constants); returns the Cartesian size."""
         self.name = name
         self.params: Tuple[Param, ...] = tuple(params)
         self.constraints = tuple(constraints)
@@ -143,10 +210,6 @@ class SearchSpace:
 
         nvals = np.array([len(p.values) for p in self.params], np.int64)
         cart = math.prod(int(n) for n in nvals)
-        if cart > max_enumeration:
-            raise ValueError(f"{name}: cartesian product {cart} too large to enumerate")
-        self.cartesian_size = cart
-
         # mixed-radix strides: the LAST parameter varies fastest, which is
         # exactly itertools.product's lexicographic order — decoding ascending
         # global indices g via (g // stride_j) % n_j reproduces the historical
@@ -157,23 +220,32 @@ class SearchSpace:
         self._nvals = nvals
         self._strides = strides
         self._value_arrays = [np.asarray(p.values) for p in self.params]
-
-        idx, codes = self._enumerate(chunk_size)
-        self.value_indices = idx                     # (N, d) int32
-        self._codes = codes                          # (N,) int64, ascending
-        self.size = len(idx)
-        if self.size == 0:
-            raise ValueError(f"{name}: all configurations violate constraints")
-
         self._norm_denom = np.array(
             [max(len(p.values) - 1, 1) for p in self.params], np.float32)
         self._norm_single = np.array(
             [len(p.values) == 1 for p in self.params], bool)
-        self._set_x_norm()
-        self._h_csr: Optional[Tuple[np.ndarray, np.ndarray]] = None
-        self._a_csr: Optional[Tuple[np.ndarray, np.ndarray]] = None
-        self._row_sq: Optional[np.ndarray] = None   # lazy ||X_norm||² cache
-        self._nbr_cache: Dict[Tuple[str, int], np.ndarray] = {}
+        return cart
+
+    def _constrain(self, idx: np.ndarray, alive: np.ndarray) -> np.ndarray:
+        """Filter ``alive`` (row positions into ``idx``) through the
+        constraints in declaration order, short-circuiting on survivors —
+        the exact per-row semantics the seed's Python loop had."""
+        for c in self.constraints:
+            if alive.size == 0:
+                break
+            sub = idx[alive]
+            if isinstance(c, VectorConstraint):
+                cols = {p.name: arr[sub[:, j]] for j, (p, arr) in
+                        enumerate(zip(self.params, self._value_arrays))}
+                alive = alive[c.mask(cols, len(alive))]
+            else:  # plain callable: chunked per-row fallback
+                ok = np.fromiter(
+                    (c({p.name: p.values[int(sub[i, j])]
+                        for j, p in enumerate(self.params)})
+                     for i in range(len(alive))),
+                    dtype=bool, count=len(alive))
+                alive = alive[ok]
+        return alive
 
     # -- enumeration ---------------------------------------------------------
     def _enumerate(self, chunk_size: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -184,24 +256,7 @@ class SearchSpace:
         for lo in range(0, cart, chunk_size):
             g = np.arange(lo, min(lo + chunk_size, cart), dtype=np.int64)
             idx = (g[:, None] // self._strides[None, :]) % self._nvals[None, :]
-            alive = np.arange(len(g))
-            # constraints run in declaration order on the surviving rows only,
-            # preserving the old per-row short-circuit semantics
-            for c in self.constraints:
-                if alive.size == 0:
-                    break
-                sub = idx[alive]
-                if isinstance(c, VectorConstraint):
-                    cols = {p.name: arr[sub[:, j]] for j, (p, arr) in
-                            enumerate(zip(self.params, self._value_arrays))}
-                    alive = alive[c.mask(cols, len(alive))]
-                else:  # plain callable: chunked per-row fallback
-                    ok = np.fromiter(
-                        (c({p.name: p.values[int(sub[i, j])]
-                            for j, p in enumerate(self.params)})
-                         for i in range(len(alive))),
-                        dtype=bool, count=len(alive))
-                    alive = alive[ok]
+            alive = self._constrain(idx, np.arange(len(g)))
             if alive.size:
                 kept_idx.append(idx[alive].astype(np.int32))
                 kept_codes.append(g[alive])
@@ -248,6 +303,10 @@ class SearchSpace:
         return [self.config(i) for i in ids]
 
     def _find_code(self, code: int) -> Optional[int]:
+        if code < 0 or code >= self.cartesian_size:
+            # out-of-grid short-circuit: skip the binary search entirely —
+            # hot in feasible-walk rejection loops
+            return None
         pos = int(np.searchsorted(self._codes, code))
         if pos < self.size and self._codes[pos] == code:
             return pos
@@ -263,8 +322,15 @@ class SearchSpace:
     def index_of_value_indices(self, row: Sequence[int]) -> Optional[int]:
         """Row of per-param value ordinals -> config index (or None if the
         combination was filtered out by the constraints)."""
-        return self._find_code(
-            sum(int(v) * int(s) for v, s in zip(row, self._strides)))
+        code = 0
+        for v, n, s in zip(row, self._nvals, self._strides):
+            v = int(v)
+            if v < 0 or v >= n:
+                # out-of-grid ordinal: without this check the radix fold can
+                # alias a DIFFERENT valid config's code and return its index
+                return None
+            code += v * int(s)
+        return self._find_code(code)
 
     # -- neighborhoods (Hamming: differ in exactly one parameter) -----------
     def _hamming_candidates(self, rows: np.ndarray, codes: np.ndarray
@@ -402,9 +468,315 @@ class SearchSpace:
             best_i[better] = lo + k[better]
         return best_i
 
+    @property
+    def resident_bytes(self) -> int:
+        """Bytes held by materialized per-config arrays (benchmark metric)."""
+        total = self.value_indices.nbytes + self._codes.nbytes
+        if isinstance(self.X_norm, np.ndarray):
+            total += self.X_norm.nbytes
+        if self._row_sq is not None:
+            total += self._row_sq.nbytes
+        for csr in (self._h_csr, self._a_csr):
+            if csr is not None:
+                total += csr[0].nbytes + csr[1].nbytes
+        return total
+
     def describe(self) -> str:
         lines = [f"SearchSpace {self.name}: {self.size} configs "
                  f"(cartesian {self.cartesian_size}, {self.dim} params)"]
+        for p in self.params:
+            vals = ", ".join(str(v) for v in p.values[:8])
+            more = "..." if len(p.values) > 8 else ""
+            lines.append(f"  {p.name}: [{vals}{more}] ({len(p.values)})")
+        return "\n".join(lines)
+
+
+class CodeNorm:
+    """Normalized-coordinate facade for the generative backend.
+
+    There is no (N, d) matrix to index: configs are identified by their
+    mixed-radix code, so ``X_norm[codes]`` decodes the requested rows on
+    demand. Only the access patterns the tuning stack uses are supported —
+    an integer code or an array of codes; dense slices would require
+    enumeration and raise.
+    """
+
+    __slots__ = ("_space", "shape")
+    dtype = np.dtype(np.float32)
+
+    def __init__(self, space: "GenerativeSpace"):
+        self._space = space
+        self.shape = (space.size, space.dim)
+
+    def __len__(self) -> int:
+        return self.shape[0]
+
+    def __getitem__(self, key) -> np.ndarray:
+        if isinstance(key, slice):
+            raise TypeError(
+                "CodeNorm has no dense rows to slice — index by config code "
+                "(the generative backend never enumerates)")
+        scalar = isinstance(key, (int, np.integer))
+        codes = np.atleast_1d(np.asarray(key, np.int64))
+        X = self._space._norm_rows(self._space.decode(codes))
+        return X[0] if scalar else X
+
+
+class GenerativeSpace(SearchSpace):
+    """Constraint-native backend for spaces too large to enumerate.
+
+    Nothing per-config is materialized — no code table, no value-index
+    matrix, no X_norm (DESIGN.md §15). A config's *index* is its mixed-radix
+    code in the full Cartesian grid, so ``config``/``index_of`` are O(d)
+    arithmetic plus a constraint check, and ``SpaceFingerprint`` identity is
+    as stable as the enumerated backend's (the digest depends only on
+    params/constraints/size, all deterministic at construction).
+
+      * feasible sampling: batched uniform code draws filtered through the
+        constraints in declaration order (``_constrain`` — same short-circuit
+        the enumerator uses), with the batch size adapted by an acceptance-
+        rate EWMA so tight constraint sets don't thrash;
+      * neighborhoods: the enumerated backend's candidate generators produce
+        the neighbor *codes* directly; each candidate is validity-checked
+        against the constraints on the fly and the resulting rows are
+        memoized FIFO like the partial-CSR frontier;
+      * nearest-point queries: per-dimension ordinal rounding (exact whenever
+        the rounded config is feasible) with a deterministic feasible anchor
+        set — seeded independently of caller RNG — as the fallback metric.
+
+    ``size`` equals ``cartesian_size``: the feasible count is unknown without
+    enumeration, and every consumer treats indices as opaque keys.
+    """
+
+    generative = True
+
+    #: Deterministic seed for the anchor sample backing nearest-point
+    #: fallback queries — independent of caller RNGs so repeated
+    #: constructions agree.
+    ANCHOR_SEED = 0xA17C4
+    ANCHOR_COUNT = 4096
+
+    def __init__(self, params: Sequence[Param],
+                 constraints: Sequence[Constraint] = (),
+                 name: str = "space",
+                 max_enumeration: int = DEFAULT_MAX_ENUMERATION,
+                 chunk_size: int = ENUM_CHUNK,
+                 csr_build_max: int = CSR_BUILD_MAX,
+                 x_norm_lazy_min: int = X_NORM_LAZY_MIN,
+                 neighbor_cache_max: int = NEIGHBOR_CACHE_MAX):
+        cart = self._init_radix(params, constraints, name,
+                                csr_build_max=csr_build_max,
+                                x_norm_lazy_min=x_norm_lazy_min,
+                                neighbor_cache_max=neighbor_cache_max)
+        if cart >= 2 ** 62:
+            raise ValueError(
+                f"{name}: cartesian product {cart} overflows int64 "
+                f"mixed-radix code arithmetic")
+        self.cartesian_size = cart
+        self.size = cart
+        self.X_norm = CodeNorm(self)
+        self._accept_ewma = 1.0     # rejection-sampling acceptance estimate
+        self._anchor_codes: Optional[np.ndarray] = None
+        self._anchor_norm: Optional[np.ndarray] = None
+        self._nbr_cache: Dict[Tuple[str, int], np.ndarray] = {}
+
+    # -- code arithmetic -----------------------------------------------------
+    def decode(self, codes: np.ndarray) -> np.ndarray:
+        """Mixed-radix codes -> (m, d) per-param ordinal rows."""
+        codes = np.asarray(codes, np.int64)
+        return (codes[:, None] // self._strides[None, :]) % self._nvals[None, :]
+
+    def _norm_rows(self, idx: np.ndarray) -> np.ndarray:
+        X = idx.astype(np.float32) / self._norm_denom
+        if self._norm_single.any():
+            X[..., self._norm_single] = 0.5
+        return X
+
+    def _feasible_mask(self, codes: np.ndarray) -> np.ndarray:
+        codes = np.asarray(codes, np.int64)
+        idx = self.decode(codes)
+        alive = self._constrain(idx, np.arange(len(codes)))
+        mask = np.zeros(len(codes), bool)
+        mask[alive] = True
+        return mask
+
+    @property
+    def value_indices(self):
+        raise AttributeError(
+            f"{self.name}: GenerativeSpace materializes no value-index table "
+            f"— decode config codes on demand via decode()")
+
+    @property
+    def x_norm_lazy(self) -> bool:
+        return True
+
+    def take(self, keep: np.ndarray) -> "SearchSpace":
+        raise NotImplementedError(
+            "GenerativeSpace has no dense index table to subset; trim the "
+            "parameter grids instead")
+
+    # -- config access -------------------------------------------------------
+    def config(self, i: int) -> Dict[str, Any]:
+        row = self.decode(np.asarray([int(i)], np.int64))[0]
+        return {p.name: p.values[int(row[j])]
+                for j, p in enumerate(self.params)}
+
+    def _find_code(self, code: int) -> Optional[int]:
+        """A code IS the index — existence just means in-grid + feasible."""
+        if code < 0 or code >= self.cartesian_size:
+            return None
+        if bool(self._feasible_mask(np.asarray([code], np.int64))[0]):
+            return int(code)
+        return None
+
+    # -- feasible sampling ---------------------------------------------------
+    def sample_feasible(self, rng: np.random.Generator, m: int) -> np.ndarray:
+        """m feasible codes via constraint-filtered uniform draws.
+
+        Batch size adapts to the running acceptance-rate estimate; if the
+        draw budget runs out with some hits, the shortfall is filled by
+        resampling the hits (pool consumers tolerate duplicates). Zero hits
+        across the whole budget raises — rejection sampling is the wrong
+        tool for that constraint density.
+        """
+        m = int(m)
+        if m <= 0:
+            return np.zeros(0, np.int64)
+        out: List[np.ndarray] = []
+        got, attempts = 0, 0
+        budget = max(64 * m, 1 << 20)
+        while got < m and attempts < budget:
+            rate = max(self._accept_ewma, 1e-3)
+            batch = int(min(max(int((m - got) / rate) + 16, 256), 1 << 17))
+            codes = rng.integers(0, self.cartesian_size, size=batch,
+                                 dtype=np.int64)
+            kept = codes[self._feasible_mask(codes)]
+            self._accept_ewma = (0.7 * self._accept_ewma
+                                 + 0.3 * (len(kept) / batch))
+            attempts += batch
+            if kept.size:
+                out.append(kept)
+                got += len(kept)
+        if got == 0:
+            raise ValueError(
+                f"{self.name}: no feasible configuration in {attempts} "
+                f"uniform draws — constraints too tight for rejection "
+                f"sampling")
+        codes = np.concatenate(out)[:m]
+        if len(codes) < m:
+            fill = codes[rng.integers(0, len(codes), size=m - len(codes))]
+            codes = np.concatenate([codes, fill])
+        return codes
+
+    def stratified_feasible(self, rng: np.random.Generator, m: int,
+                            rounds: int = 16) -> np.ndarray:
+        """One feasible code per equal-width code stratum (coverage draws).
+
+        Stratum edges use Python-int arithmetic — np.linspace would lose
+        integer precision above 2**53. Strata that stay dry after ``rounds``
+        rejection attempts fall back to global feasible draws.
+        """
+        cart = self.cartesian_size
+        m = int(min(m, cart))
+        if m <= 0:
+            return np.zeros(0, np.int64)
+        out = np.full(m, -1, np.int64)
+        unfilled = np.arange(m)
+        for _ in range(rounds):
+            if unfilled.size == 0:
+                break
+            los = np.array([i * cart // m for i in unfilled], np.int64)
+            his = np.array([(i + 1) * cart // m for i in unfilled], np.int64)
+            draws = rng.integers(los, his, dtype=np.int64)
+            mask = self._feasible_mask(draws)
+            out[unfilled[mask]] = draws[mask]
+            unfilled = unfilled[~mask]
+        if unfilled.size:
+            out[unfilled] = self.sample_feasible(rng, int(unfilled.size))
+        return out
+
+    def random_index(self, rng: np.random.Generator) -> int:
+        return int(self.sample_feasible(rng, 1)[0])
+
+    # -- neighborhoods: feasible walks --------------------------------------
+    def _neighbors(self, i: int, candidates_fn, csr_attr: str) -> List[int]:
+        """Neighbor codes generated on the fly, validity-checked against the
+        constraints, memoized FIFO exactly like the partial-CSR frontier.
+        Candidate column order is inherited from the enumerated backend's
+        generators, so parity tests can compare neighbor *sets* directly."""
+        key = (csr_attr, int(i))
+        hit = self._nbr_cache.get(key)
+        if hit is None:
+            code = np.asarray([int(i)], np.int64)
+            cand, valid = candidates_fn(self.decode(code), code)
+            cand = cand[0][valid[0]]
+            hit = cand[self._feasible_mask(cand)]
+            if len(self._nbr_cache) >= self._nbr_cache_max:
+                self._nbr_cache.pop(next(iter(self._nbr_cache)))
+            self._nbr_cache[key] = hit
+        return hit.tolist()
+
+    # -- nearest-point queries -----------------------------------------------
+    def _round_codes(self, X: np.ndarray) -> np.ndarray:
+        """[0,1]^d points -> codes of the per-dimension nearest grid rows."""
+        ords = np.rint(np.asarray(X, np.float64) * self._norm_denom)
+        ords = np.clip(ords, 0, self._nvals - 1).astype(np.int64)
+        return ords @ self._strides
+
+    def _anchors(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self._anchor_codes is None:
+            rng = np.random.default_rng(self.ANCHOR_SEED)
+            n = int(min(self.ANCHOR_COUNT, self.cartesian_size))
+            self._anchor_codes = np.unique(self.sample_feasible(rng, n))
+            self._anchor_norm = self._norm_rows(
+                self.decode(self._anchor_codes))
+        return self._anchor_codes, self._anchor_norm
+
+    def nearest_index(self, x_norm: np.ndarray,
+                      exclude: Optional[set] = None,
+                      chunk: int = 1 << 16) -> int:
+        x = np.asarray(x_norm, np.float32)
+        code = int(self._round_codes(x[None, :])[0])
+        if (exclude is None or code not in exclude) and \
+                self._find_code(code) is not None:
+            return code
+        anchors, anchor_norm = self._anchors()
+        d2 = np.sum((anchor_norm - x[None, :]) ** 2, axis=1)
+        if exclude:
+            hit = np.isin(anchors, np.fromiter(exclude, np.int64,
+                                               count=len(exclude)))
+            d2[hit] = np.inf
+        return int(anchors[int(np.argmin(d2))])
+
+    def nearest_indices(self, X: np.ndarray, chunk: int = 1 << 16
+                        ) -> np.ndarray:
+        X = np.asarray(X, np.float32)
+        if X.ndim == 1:
+            X = X[None, :]
+        codes = self._round_codes(X)
+        ok = self._feasible_mask(codes)
+        if not ok.all():
+            anchors, anchor_norm = self._anchors()
+            bad = np.flatnonzero(~ok)
+            d2 = (np.sum(X[bad] ** 2, axis=1)[:, None]
+                  + np.sum(anchor_norm ** 2, axis=1)[None, :]
+                  - 2.0 * (X[bad] @ anchor_norm.T))
+            codes[bad] = anchors[np.argmin(d2, axis=1)]
+        return codes
+
+    @property
+    def resident_bytes(self) -> int:
+        total = (self._nvals.nbytes + self._strides.nbytes
+                 + self._norm_denom.nbytes + self._norm_single.nbytes)
+        if self._anchor_codes is not None:
+            total += self._anchor_codes.nbytes + self._anchor_norm.nbytes
+        for arr in self._nbr_cache.values():
+            total += arr.nbytes
+        return total
+
+    def describe(self) -> str:
+        lines = [f"GenerativeSpace {self.name}: cartesian "
+                 f"{self.cartesian_size} ({self.dim} params, not enumerated)"]
         for p in self.params:
             vals = ", ".join(str(v) for v in p.values[:8])
             more = "..." if len(p.values) > 8 else ""

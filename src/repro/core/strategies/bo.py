@@ -92,6 +92,52 @@ def _stratified_indices(n: int, m: int, rng: np.random.Generator) -> np.ndarray:
     return rng.integers(edges[:-1], np.maximum(edges[1:], edges[:-1] + 1))
 
 
+class _SparseFlags:
+    """Set-backed stand-in for a dense boolean flag array.
+
+    The generative backend keys configs by mixed-radix code over grids with
+    10^9+ cells; ``np.zeros(space.size, bool)`` would be gigabytes for a
+    handful of set flags. Supports exactly the access patterns BOStrategy
+    uses — scalar get/set, fancy-index get, ``sum()``, and enumeration of
+    the set indices (sorted, matching ``np.flatnonzero`` semantics).
+    """
+
+    __slots__ = ("_set",)
+
+    def __init__(self):
+        self._set: set = set()
+
+    def __getitem__(self, key):
+        if isinstance(key, (int, np.integer)):
+            return int(key) in self._set
+        key = np.asarray(key)
+        if not self._set:
+            return np.zeros(key.shape, bool)
+        return np.isin(key, np.fromiter(self._set, np.int64,
+                                        count=len(self._set)))
+
+    def __setitem__(self, key, value):
+        if value:
+            self._set.add(int(key))
+        else:
+            self._set.discard(int(key))
+
+    def sum(self) -> int:
+        return len(self._set)
+
+    def indices(self) -> np.ndarray:
+        if not self._set:
+            return np.zeros(0, np.int64)
+        return np.sort(np.fromiter(self._set, np.int64, count=len(self._set)))
+
+
+def _flag_indices(flags) -> np.ndarray:
+    """Set indices of a dense bool array or a _SparseFlags, sorted."""
+    if isinstance(flags, _SparseFlags):
+        return flags.indices()
+    return np.flatnonzero(flags)
+
+
 class _EngineAdapter:
     """Uniform .add / .predict_all / .predict_at / .y_std / .mark /
     .rollback over both GP engines. ``X_cand=None`` selects candidate-pool
@@ -154,7 +200,9 @@ class BOStrategy(Strategy):
         self._budget = ctx.budget
         ell = (cfg.lengthscale_cv if cfg.exploration == "cv"
                else cfg.lengthscale)
-        self.pool_on = cfg.pool_active(ctx.space.size)
+        # the generative backend has no dense candidate panel at all, so it
+        # is always pool-mode regardless of the configured threshold
+        self.pool_on = cfg.pool_active(ctx.space.size) or ctx.space.generative
         if self.pool_on:
             # no fixed candidate panel: an (max_obs, N) V matrix over a
             # multi-million-config space would not fit in memory
@@ -163,8 +211,12 @@ class BOStrategy(Strategy):
         else:
             self.gp = _EngineAdapter(cfg, ctx.space.X_norm, max_obs=ctx.budget,
                                      ell=ell)
-        self.evaluated = np.zeros(ctx.space.size, dtype=bool)
-        self.pending = np.zeros(ctx.space.size, dtype=bool)  # in flight
+        if ctx.space.generative:
+            self.evaluated = _SparseFlags()
+            self.pending = _SparseFlags()                    # in flight
+        else:
+            self.evaluated = np.zeros(ctx.space.size, dtype=bool)
+            self.pending = np.zeros(ctx.space.size, dtype=bool)  # in flight
         self.f_best = math.inf
         self.controller: Optional[A.MultiAcquisition] = None
         self.mu_s = 0.0
@@ -260,8 +312,7 @@ class BOStrategy(Strategy):
             # σ̄²_s estimated on a stratified draw — the same estimator every
             # later pool round uses, so the contextual-variance ratio is
             # like-for-like (acquisition.pool_contextual_variance)
-            probe = _stratified_indices(self.space.size,
-                                        max(self.cfg.pool_size, 256), self.rng)
+            probe = self._pool_strata(max(self.cfg.pool_size, 256))
             _, sigma0 = self.gp.predict_at(self.space.X_norm[probe])
         else:
             _, sigma0 = self.gp.predict_all()
@@ -378,6 +429,14 @@ class BOStrategy(Strategy):
         return out
 
     # -- ask, candidate-pool mode (DESIGN.md §10) ---------------------------
+    def _pool_strata(self, m: int) -> np.ndarray:
+        """Stratified coverage draws: dense positions on the enumerated
+        backend, feasible codes (rejection-sampled per stratum) on the
+        generative one."""
+        if self.space.generative:
+            return self.space.stratified_feasible(self.rng, m)
+        return _stratified_indices(self.space.size, m, self.rng)
+
     def _build_pool(self) -> np.ndarray:
         """Pool = incumbent Hamming neighborhoods + stratified random draws
         (+ periodic LHS refresh), minus evaluated/pending configs."""
@@ -388,7 +447,7 @@ class BOStrategy(Strategy):
                 nbrs = space.hamming_neighbors(int(i))
                 if nbrs:
                     parts.append(np.asarray(nbrs, np.int64))
-        parts.append(_stratified_indices(space.size, cfg.pool_size, rng))
+        parts.append(self._pool_strata(cfg.pool_size))
         if (cfg.pool_lhs_points > 0
                 and self._round % max(cfg.pool_lhs_every, 1) == 0):
             pts = lhs_unit(cfg.pool_lhs_points, space.dim, rng,
@@ -397,10 +456,17 @@ class BOStrategy(Strategy):
         pool = np.unique(np.concatenate(parts))
         pool = pool[~(self.evaluated[pool] | self.pending[pool])]
         if pool.size == 0:
-            free = np.flatnonzero(~(self.evaluated | self.pending))
-            if free.size:
-                pool = rng.choice(free, size=min(cfg.pool_size, free.size),
-                                  replace=False)
+            if space.generative:
+                # no dense free-set to fall back on: draw fresh feasible
+                # codes and keep whatever is not already tried/in flight
+                cand = np.unique(space.sample_feasible(rng, cfg.pool_size))
+                pool = cand[~(self.evaluated[cand] | self.pending[cand])]
+            else:
+                free = np.flatnonzero(~(self.evaluated | self.pending))
+                if free.size:
+                    pool = rng.choice(free,
+                                      size=min(cfg.pool_size, free.size),
+                                      replace=False)
         return pool
 
     def _suggest_bo_pool(self, n: int) -> List[Proposal]:
@@ -413,7 +479,7 @@ class BOStrategy(Strategy):
         if pool.size == 0:
             return out
         Xp = self.space.X_norm[pool]
-        in_flight = np.flatnonzero(self.pending)
+        in_flight = _flag_indices(self.pending)
         speculate = n > 1 or in_flight.size > 0
         if speculate:
             self.gp.mark()

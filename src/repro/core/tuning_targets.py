@@ -93,9 +93,31 @@ def sharding_space(arch: str, shape: str, wide: bool = False) -> SearchSpace:
             lambda c: GLOBAL_BATCH % c["microbatches"] == 0,
             name="microbatch_divides_batch"))
     if arch.startswith(("deepseek", "qwen3")):
-        params.append(Param("capacity_factor", (1.0, 1.1, 1.25, 1.5,
-                                                1.75, 2.0)))
+        # MoE cells get the full distribution-knob grid: cartesian goes past
+        # 10^9 on train_4k, which the generative backend (DESIGN.md §15)
+        # serves without enumeration. Narrow/trimmed MoE fingerprints are
+        # intentionally incompatible with this wide grid (extra params), so
+        # cross-width transfer is off for MoE cells — by design, not drift.
+        params.append(Param("capacity_factor", (1.0, 1.05, 1.1, 1.25, 1.4,
+                                                1.5, 1.6, 1.75, 2.0)))
         params.append(Param("experts_rule", ("model", "model+data")))
+        params.append(Param("attn_block_q", (128, 192, 256, 384, 512, 768,
+                                             1024, 1536, 2048, 3072, 4096)))
+        params.append(Param("moe_combine", ("gather", "a2a")))
+        params.append(Param("grad_compression", ("none", "topk", "int8")))
+        params.append(Param("grad_compression_topk", (0.01, 0.05, 0.1)))
+        cons += [
+            # blockwise flash keeps a q×kv f32 accumulator tile in VMEM
+            VectorConstraint(lambda c: (c["flash"] == 0)
+                             | (c["attn_block_q"] * c["attn_block_kv"]
+                                <= 2 ** 21),
+                             name="flash_q_kv_vmem"),
+            # the top-k ratio only exists under top-k compression; pin it to
+            # its default otherwise so the knob can't split identical configs
+            VectorConstraint(lambda c: (c["grad_compression"] == "topk")
+                             | (c["grad_compression_topk"] == 0.05),
+                             name="topk_ratio_coupling"),
+        ]
     if arch.startswith("xlstm"):
         params.append(Param("mlstm_chunk", (0, 16, 32, 48, 64, 96, 128,
                                             192, 256)))
@@ -123,6 +145,15 @@ def _config_args(cfg: Dict[str, Any]) -> List[str]:
         args += ["--no-flash"]
     if cfg.get("mlstm_chunk"):
         args += ["--mlstm-chunk", str(cfg["mlstm_chunk"])]
+    if cfg.get("attn_block_q"):
+        args += ["--attn-block-q", str(cfg["attn_block_q"])]
+    if cfg.get("moe_combine") and cfg["moe_combine"] != "gather":
+        args += ["--moe-combine", cfg["moe_combine"]]
+    if cfg.get("grad_compression") and cfg["grad_compression"] != "none":
+        args += ["--grad-compression", cfg["grad_compression"]]
+        if cfg["grad_compression"] == "topk" and cfg.get("grad_compression_topk"):
+            args += ["--grad-compression-topk",
+                     str(cfg["grad_compression_topk"])]
     rules = []
     if cfg.get("experts_rule") == "model+data":
         rules.append("experts=model+data")

@@ -64,6 +64,12 @@ def _pcfg_from_args(args) -> ParallelConfig:
         kw["mlstm_bf16_streams"] = True
     if getattr(args, "moe_combine", None):
         kw["moe_combine"] = args.moe_combine
+    if getattr(args, "attn_block_q", None):
+        kw["attn_block_q"] = args.attn_block_q
+    if getattr(args, "grad_compression", None):
+        kw["grad_compression"] = args.grad_compression
+    if getattr(args, "grad_compression_topk", None):
+        kw["grad_compression_topk"] = args.grad_compression_topk
     if args.rules:
         # "act_cache_seq=model,embed=None" style overrides
         pr = dict(ParallelConfig().param_rules)
@@ -186,6 +192,12 @@ def main() -> None:
     ap.add_argument("--mlstm-bf16", dest="mlstm_bf16", action="store_true")
     ap.add_argument("--moe-combine", dest="moe_combine", default=None,
                     choices=["gather", "a2a"])
+    ap.add_argument("--attn-block-q", dest="attn_block_q", type=int,
+                    default=None)
+    ap.add_argument("--grad-compression", dest="grad_compression",
+                    default=None, choices=["none", "topk", "int8"])
+    ap.add_argument("--grad-compression-topk", dest="grad_compression_topk",
+                    type=float, default=None)
     ap.add_argument("--rules", default=None, help="logical=mesh overrides, comma-sep")
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--save-hlo", default=None)

@@ -15,7 +15,10 @@ that raised it, and a daemon crash mid-run re-arms after the claim TTL.
 
 A cell key ``dryrun[arch×shape×mesh]`` maps back to its tuning problem by
 parsing the id the resolver minted (``repro.store.resolve.cell_objective``);
-tests inject ``objective_for`` to service simulated cells instead.
+``kernel[name×shape×device]`` keys (repro.kernels.tuning) map to in-process
+kernel-tuning objectives the same way, so one daemon services both the
+sharding and the kernel halves of a serving cell. Tests inject
+``objective_for`` to service simulated cells instead.
 """
 from __future__ import annotations
 
@@ -29,6 +32,12 @@ from repro.store.queue import DurableRetuneQueue
 from repro.store.records import TuningRecordStore
 
 _CELL_RE = re.compile(r"^dryrun\[(?P<arch>.+?)×(?P<shape>.+?)×(?P<mesh>.+?)\]$")
+_KERNEL_RE = re.compile(
+    r"^kernel\[(?P<name>.+?)×(?P<sig>.+?)×(?P<device>.+?)\]$")
+#: shape-signature grammars of the kernel cell factories (kernels/tuning.py)
+_GEMM_SIG = re.compile(r"^(?P<M>\d+)x(?P<N>\d+)x(?P<K>\d+)$")
+_FLASH_SIG = re.compile(r"^B(?P<B>\d+)_S(?P<S>\d+)_H(?P<H>\d+)_hd(?P<hd>\d+)$")
+_GP_SIG = re.compile(r"^N(?P<N>\d+)_T(?P<T>\d+)_d(?P<d>\d+)$")
 
 
 def dryrun_objective_for(key: str):
@@ -45,11 +54,53 @@ def dryrun_objective_for(key: str):
                            m.group("mesh"))
 
 
+def kernel_objective_for(key: str):
+    """A ``kernel[name×shape×device]`` cell key back to its in-process
+    tuning objective: the shape signature is the cell factory's own format,
+    so the daemon reconstructs the exact cell the server resolved blocks
+    for. Raises on malformed keys/signatures (same loud-failure policy as
+    ``dryrun_objective_for``)."""
+    m = _KERNEL_RE.match(key)
+    if m is None:
+        raise ValueError(f"unrecognized retune cell key {key!r} — expected "
+                         "a kernel[name×shape×device] tuning objective id")
+    from repro.kernels import tuning as KT
+    name, sig, device = m.group("name"), m.group("sig"), m.group("device")
+    if name == "gemm":
+        sm = _GEMM_SIG.match(sig)
+        if sm:
+            cell = KT.gemm_cell(int(sm.group("M")), int(sm.group("N")),
+                                int(sm.group("K")))
+            return KT.KernelObjective(cell, device=device)
+    elif name == "flash":
+        sm = _FLASH_SIG.match(sig)
+        if sm:
+            cell = KT.flash_cell(int(sm.group("B")), int(sm.group("S")),
+                                 int(sm.group("H")), int(sm.group("hd")))
+            return KT.KernelObjective(cell, device=device)
+    elif name == "gp":
+        sm = _GP_SIG.match(sig)
+        if sm:
+            cell = KT.gp_cell(int(sm.group("N")), int(sm.group("T")),
+                              int(sm.group("d")))
+            return KT.KernelObjective(cell, device=device)
+    raise ValueError(f"unrecognized kernel cell signature in {key!r}")
+
+
+def cell_objective_for(key: str):
+    """Dispatch a retune cell key to its tuning objective — sharding cells
+    (``dryrun[...]``) and kernel cells (``kernel[...]``) through one
+    daemon."""
+    if key.startswith("kernel["):
+        return kernel_objective_for(key)
+    return dryrun_objective_for(key)
+
+
 class RetuneDaemon:
     """Claim-and-service loop over a store's durable retune queue."""
 
     def __init__(self, store_path: str, *,
-                 objective_for: Callable = dryrun_objective_for,
+                 objective_for: Callable = cell_objective_for,
                  strategy_factory: Optional[Callable] = None,
                  budget: int = 40, seed: int = 0,
                  worker: Optional[str] = None, claim_ttl: float = 3600.0,

@@ -41,12 +41,14 @@ Crash matrix:
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from repro.store.records import TuningRecordStore
+from repro.store.index import index_is_stale, load_index
+from repro.store.records import TuningRecordStore, _is_single_file
 from repro.store.watch import StoreWatcher
 
 
@@ -73,12 +75,21 @@ class DurableRetuneQueue:
     instance on the same path sees everything prior processes did."""
 
     def __init__(self, path: str, *, worker: Optional[str] = None,
-                 claim_ttl: float = 3600.0, clock=time.time, appender=None):
+                 claim_ttl: float = 3600.0, clock=time.time, appender=None,
+                 use_index: bool = True):
         """``appender`` shares an already-open ``TuningRecordStore`` for the
         control-record writes. Pass the process's existing appender (the
         serve loop passes its ``ProdRecorder``'s) — compaction judges
         "sealed" per pid, so a process must keep ONE live append segment,
-        not one per component."""
+        not one per component.
+
+        Cold start is index-seeded when the sidecar index is present and
+        fresh (``use_index=True``): only the ``kind="retune"`` extents are
+        read — O(control lines), not O(store) — and the watcher starts each
+        indexed segment at its indexed frontier, so a daemon opening a
+        million-record store folds a handful of lines instead of parsing
+        every observation ever journaled. A missing/stale index falls back
+        to the full replay."""
         self.path = path
         self.worker = worker or f"proc-{os.getpid()}"
         self.claim_ttl = float(claim_ttl)
@@ -86,14 +97,49 @@ class DurableRetuneQueue:
         self._owns_store = appender is None
         self._store = (appender if appender is not None
                        else TuningRecordStore(path, load=False))
-        self._watcher = StoreWatcher(path, from_start=True,
-                                     collect_controls=True)
         self._tickets: Dict[str, RetuneTicket] = {}
-        # fold the store's current control state NOW: the first refresh
-        # replays every segment, and paying that at construction keeps it
-        # off the serve loop's decode latency path (submit happens between
-        # decode steps). Index-seeded folding is a ROADMAP item.
+        self.seeded_from_index = False
+        start_offsets = None
+        if use_index:
+            idx = load_index(path)
+            if idx is not None and not index_is_stale(path, idx):
+                single = _is_single_file(path)
+                for ext in idx.controls.get("retune", ()):
+                    seg = (path if single
+                           else os.path.join(path, ext.segment))
+                    self._fold_extent(seg, ext.offset, ext.length)
+                start_offsets = dict(idx.segments)
+                self.seeded_from_index = True
+        self._watcher = StoreWatcher(path, from_start=True,
+                                     collect_controls=True,
+                                     start_offsets=start_offsets)
+        # fold the store's current control state NOW: the post-index tail
+        # (or, unseeded, every segment) is replayed at construction, keeping
+        # it off the serve loop's decode latency path (submit happens
+        # between decode steps).
         self._refresh()
+
+    def _fold_extent(self, seg: str, offset: int, length: int) -> None:
+        """Fold the retune lines of one indexed extent. Extents span whole
+        lines by construction (and may include absorbed blank lines);
+        folding is idempotent, so re-seeing a line — e.g. a compacted copy —
+        is harmless."""
+        try:
+            with open(seg, "rb") as f:
+                f.seek(offset)
+                data = f.read(length)
+        except OSError:
+            return
+        for line in data.split(b"\n"):
+            text = line.decode("utf-8", errors="replace").strip()
+            if not text:
+                continue
+            try:
+                d = json.loads(text)
+            except json.JSONDecodeError:
+                continue
+            if d.get("kind") == "retune":
+                self._fold(d)
 
     # -- folding ------------------------------------------------------------
     def _fold(self, d: dict) -> None:

@@ -16,7 +16,8 @@ from repro.store.records import SpaceFingerprint, TuningRecordStore
 #: sharding-space parameters that map 1:1 onto ParallelConfig fields
 _PCFG_FIELDS = ("remat", "attn_q_chunks", "logits_chunk", "attn_block_kv",
                 "microbatches", "capacity_factor", "opt_moment_dtype",
-                "mlstm_chunk")
+                "mlstm_chunk", "attn_block_q", "moe_combine",
+                "grad_compression", "grad_compression_topk")
 
 
 def cell_objective(arch: str, shape: str, mesh: str = "single") -> str:

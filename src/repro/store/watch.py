@@ -84,10 +84,19 @@ class StoreWatcher:
     ``collect_controls=True`` additionally retains ``kind="retune"`` control
     records for ``drain_controls()`` (the durable queue's read path);
     otherwise they are skipped.
+
+    ``start_offsets`` (basename -> byte offset) seeds per-segment read
+    positions: a caller that already consumed a segment's prefix through a
+    side channel — the durable queue folding the sidecar index's control
+    extents — starts each named segment at its indexed frontier instead of
+    replaying it. Unnamed segments keep the ``from_start`` behavior, and the
+    pre-frontier bytes count as consumed for compaction provenance (their
+    content was delivered, just not through ``poll``).
     """
 
     def __init__(self, path: str, *, from_start: bool = True,
-                 collect_controls: bool = False):
+                 collect_controls: bool = False,
+                 start_offsets: Optional[Dict[str, int]] = None):
         self.path = path
         self.single_file = _is_single_file(path)
         self.collect_controls = bool(collect_controls)
@@ -104,6 +113,18 @@ class StoreWatcher:
                 except FileNotFoundError:
                     continue
                 self._tails[seg] = _Tail(offset=st.st_size, mtime=st.st_mtime)
+        elif start_offsets:
+            for name, off in start_offsets.items():
+                seg = (self.path if self.single_file
+                       else os.path.join(self.path, name))
+                try:
+                    size = os.path.getsize(seg)
+                except FileNotFoundError:
+                    continue
+                # clamp: an offset past the current size (segment rewritten
+                # shorter than the index claims) must not wedge the tail
+                self._tails[seg] = _Tail(offset=min(int(off), size),
+                                         mtime=-1.0)
 
     def _segments(self) -> List[str]:
         return list_segments(self.path, self.single_file)
@@ -263,6 +284,13 @@ class HotConfigSource:
         return cls(path, "", "", space=cell.space,
                    objective_id=cell.objective_id(device),
                    swap_margin=swap_margin)
+
+    @property
+    def stale(self) -> bool:
+        """No exact-fingerprint record has ever landed: the cell serves a
+        cross-digest fallback (or built-in defaults) — its own measured
+        problem was never tuned, which makes it a retune candidate."""
+        return self._best_exact is None
 
     def _fold(self, rec: TuningRecord) -> None:
         if rec.config is None or not math.isfinite(rec.value):
@@ -462,6 +490,7 @@ class ServeStats:
     kernel_swaps: List[Tuple[int, Dict[str, Any], float]] = field(
         default_factory=list)          # (global step, block config, step time)
     retunes_requested: int = 0
+    kernel_retunes_requested: int = 0
 
 
 class OnlineServeLoop:
@@ -539,12 +568,32 @@ class OnlineServeLoop:
         self._warmup = True        # first post-swap step pays the re-jit
         stats.kernel_swaps.append((self.step, dict(cfg), value))
 
+    def _maybe_retune_kernel(self, stats: ServeStats) -> None:
+        """Kernel-cell staleness → durable retune request: while no exact
+        record exists for this cell's kernel fingerprint (serving a
+        cross-shape fallback or pure-JAX defaults), ask the fleet to tune
+        it. The durable queue dedupes per cell key, so re-checking every
+        poll costs one open-ticket lookup, not duplicate work; after a
+        daemon services the request, the tuned record lands, ``stale``
+        flips, and submissions stop."""
+        if (self.kernel_source is None or self.retune_queue is None
+                or not self.kernel_source.stale):
+            return
+        from repro.core.engine import RetuneRequest
+        accepted = self.retune_queue.submit(RetuneRequest(
+            key=self.kernel_source.objective_id,
+            objective=self.kernel_source.objective_id,
+            observed=math.nan, predicted=math.nan,
+            reason="stale", t=float(self.clock())))
+        stats.kernel_retunes_requested += int(accepted)
+
     def run(self, steps: int) -> ServeStats:
         stats = ServeStats()
         for _ in range(int(steps)):
             if self.step % self.poll_every == 0:
                 self._maybe_swap(stats)
                 self._maybe_swap_kernel(stats)
+                self._maybe_retune_kernel(stats)
             dt = self.server.decode_step()
             stats.steps += 1
             stats.latencies.append(dt)

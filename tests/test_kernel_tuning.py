@@ -172,3 +172,32 @@ def test_apply_kernel_config_overlay():
     # a gemm-cell config has no flash keys: untouched
     same = apply_kernel_config(pcfg, {"block_m": 64})
     assert same.kernel is None
+
+
+# -- daemon-side cell-key parsing (launch/retune.py) -------------------------
+
+def test_kernel_cell_keys_round_trip_to_objectives():
+    """The retune daemon reconstructs the exact cell a server resolved
+    blocks for, from nothing but the objective-id string in the ticket."""
+    from repro.launch.retune import cell_objective_for, kernel_objective_for
+    for cell in (kt.gemm_cell(512, 256, 128),
+                 kt.flash_cell(2, 256, 4, 64),
+                 kt.gp_cell(N=1024, T=128, d=8)):
+        key = cell.objective_id("tpu")
+        obj = cell_objective_for(key)
+        assert isinstance(obj, kt.KernelObjective)
+        assert obj.name == key, "re-tuned records land under the same id"
+        assert obj.space.size == cell.space.size
+        assert kernel_objective_for(key).name == key
+
+
+def test_malformed_kernel_cell_keys_fail_loud():
+    from repro.launch.retune import cell_objective_for, kernel_objective_for
+    for bad in ("kernel[gemm×512x256×tpu]",          # malformed gemm sig
+                "kernel[flash×512x256x128×tpu]",     # sig of the wrong cell
+                "kernel[conv×1x2x3×tpu]",            # unknown kernel name
+                "kernel[gemm×512x256x128]"):         # missing device field
+        with pytest.raises(ValueError):
+            kernel_objective_for(bad)
+    with pytest.raises(ValueError):
+        cell_objective_for("not-a-cell-key")

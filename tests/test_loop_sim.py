@@ -413,3 +413,48 @@ def test_kernel_swap_does_not_disturb_sharding_loop(tmp_path):
     # both swaps happened at step 0's poll -> one warmup step total was
     # withheld from prod telemetry
     assert sim.recorder.count == stats.steps - 1
+
+
+def test_stale_kernel_cell_auto_enqueues_retune_and_daemon_closes_loop(tmp_path):
+    """Serve-side kernel staleness closes the loop without a human: a cell
+    serving fallback kernels (no exact-fingerprint record has EVER landed)
+    enqueues exactly one durable retune request; a daemon services it with
+    the cell's own objective; the serving fleet hot-reloads the result and
+    the cell stops being a retune candidate."""
+    path = str(tmp_path / "store")
+    sim = LoopSim(path, kernel_cell=True, durable_queue=True)
+    assert sim.kernel_source.stale
+    stats = sim.serve(6)
+    assert stats.kernel_retunes_requested == 1, \
+        "stale cell enqueues once; per-cell dedupe absorbs later polls"
+    tickets = sim.queue.open_tickets()
+    assert [tk.key for tk in tickets] == [sim.kernel_source.objective_id]
+    assert tickets[0].reason == "stale"
+
+    from repro.core.objectives import SimulatedObjective
+    from repro.launch.retune import RetuneDaemon
+    kobj = SimulatedObjective(sim.kernel_space, sim.kernel_times,
+                              name=sim.kernel_source.objective_id)
+    daemon = RetuneDaemon(path, objective_for=lambda key: kobj,
+                          budget=8, worker="ktune-daemon",
+                          clock=sim.clock)
+    assert daemon.step() is not None and daemon.step() is None
+
+    stats = sim.serve(6)
+    assert len(stats.kernel_swaps) == 1, "fleet hot-reloads the retune"
+    assert not sim.kernel_source.stale
+    assert stats.kernel_retunes_requested == 0, \
+        "an exact record landed: the cell is no longer a retune candidate"
+    assert len(sim.queue) == 0
+
+
+def test_fresh_kernel_cell_never_enqueues(tmp_path):
+    """A kernel cell already tuned under its exact fingerprint must not
+    request a retune — staleness means 'never tuned', not 'tunable'."""
+    sim = LoopSim(str(tmp_path / "store"), kernel_cell=True,
+                  durable_queue=True)
+    sim.append_kernel_record(int(np.argmin(sim.kernel_times)))
+    stats = sim.serve(6)
+    assert len(stats.kernel_swaps) == 1
+    assert stats.kernel_retunes_requested == 0
+    assert len(sim.queue) == 0

@@ -349,6 +349,52 @@ def test_queue_state_survives_compaction(tmp_path):
     assert fresh.claim().key == "cell-open"
 
 
+def test_queue_cold_start_seeds_from_sidecar_index(tmp_path):
+    """Daemon cold start on an indexed store: only the ``kind="retune"``
+    extents are read and the watcher tails start at each segment's indexed
+    frontier — the observation bulk is never parsed. State must equal the
+    full-replay fold exactly."""
+    path = str(tmp_path / "store")
+    _fill(path, segments=2, per_segment=6)    # observation bulk to skip
+    q = DurableRetuneQueue(path, worker="server-1")
+    assert not q.seeded_from_index, "no index yet: full replay"
+    assert q.submit(_Req("cell-open"))
+    done_req = _Req("cell-done", t=0.5)
+    assert q.submit(done_req)
+    tk = [t for t in q.open_tickets() if t.key == "cell-done"][0]
+    q.claim()                                 # oldest = cell-done (t=0.5)
+    q.done(tk)
+    q.close()
+    TuningRecordStore(path, lazy=True).close()   # writes the sidecar index
+
+    seeded = DurableRetuneQueue(path, worker="daemon-1")
+    unseeded = DurableRetuneQueue(path, worker="daemon-2", use_index=False)
+    assert seeded.seeded_from_index and not unseeded.seeded_from_index
+    assert ([t.id for t in seeded.open_tickets()]
+            == [t.id for t in unseeded.open_tickets()] != [])
+    ticket = seeded.claim()                   # post-index appends still seen
+    assert ticket is not None and ticket.key == "cell-open"
+    seeded.done(ticket)
+    assert DurableRetuneQueue(path, worker="daemon-3").claim() is None
+
+
+def test_queue_index_seed_ignores_stale_index(tmp_path):
+    """A segment that shrank after indexing (compaction by an old tool,
+    manual surgery) makes the index lie about offsets: cold start must fall
+    back to the full replay, not fold garbage."""
+    path = str(tmp_path / "store")
+    q = DurableRetuneQueue(path, worker="server-1")
+    assert q.submit(_Req("cell-a"))
+    q.close()
+    TuningRecordStore(path, lazy=True).close()   # fresh index
+    seg = next(os.path.join(path, f) for f in sorted(os.listdir(path))
+               if f.startswith("segment-"))
+    with open(seg, "r+b") as f:                  # shrink: index goes stale
+        f.truncate(max(os.path.getsize(seg) - 1, 0))
+    fresh = DurableRetuneQueue(path, worker="daemon-1")
+    assert not fresh.seeded_from_index
+
+
 # ---------------------------------------------------------------------------
 # prod quantile summaries + drift stat (satellites)
 # ---------------------------------------------------------------------------

@@ -53,7 +53,7 @@ def tune_cell(cell, store, *, budget: int, reps: int, seed: int = 0) -> Dict:
     emit(f"kernel_tuning/{cell.kernel}_{cell.shape_sig}", tuned_s * 1e6,
          f"default={default_s * 1e6:.1f}us speedup={speedup:.2f}x "
          f"cfg={best_cfg}")
-    return {
+    row = {
         "kernel": cell.kernel, "shape": cell.shape_sig,
         "space_size": cell.space.size,
         "default_config": cell.default, "default_s": default_s,
@@ -61,11 +61,20 @@ def tune_cell(cell, store, *, budget: int, reps: int, seed: int = 0) -> Dict:
         "speedup": speedup, "budget": budget, "reps": reps,
         "unique_evals": res.unique_evals, "budget_curve": curve,
     }
+    if cell.kernel == "decode":
+        # the decode cell is one token per batch row per step: step time IS
+        # the serving rate, so report it in the unit serving dashboards use
+        B = int(cell.meta["B"])
+        row["tokens_per_s_default"] = (B / default_s if default_s > 0
+                                       else float("nan"))
+        row["tokens_per_s_tuned"] = (B / tuned_s if tuned_s > 0
+                                     else float("nan"))
+    return row
 
 
 def main(*, smoke: bool = False, budget: Optional[int] = None,
          reps: Optional[int] = None, store_path: Optional[str] = None,
-         seed: int = 0) -> Dict:
+         seed: int = 0, assert_decode_win: bool = False) -> Dict:
     budget = budget or (6 if smoke else 14)
     reps = reps or (1 if smoke else 3)
     store = None
@@ -87,6 +96,17 @@ def main(*, smoke: bool = False, budget: Optional[int] = None,
                      payload)
     print(f"[kernel_tuning] {wins}/{len(rows)} cells tuned <= default "
           f"-> {path}")
+    if assert_decode_win:
+        # nightly acceptance gate (ISSUE 8): the serve-hot-path cell must
+        # never regress past its built-in default
+        decode_rows = [r for r in rows if r["kernel"] == "decode"]
+        assert decode_rows, "no decode cell in the matrix"
+        for r in decode_rows:
+            assert r["tuned_s"] <= r["default_s"], (
+                f"decode cell {r['shape']}: tuned {r['tuned_s']:.6f}s > "
+                f"default {r['default_s']:.6f}s")
+        print(f"[kernel_tuning] decode gate OK: tuned <= default on "
+              f"{len(decode_rows)} decode cell(s)")
     return payload
 
 
@@ -101,6 +121,10 @@ if __name__ == "__main__":
                          "layer and kernel_bench then resolve tuned blocks "
                          "from it)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--assert-decode-win", action="store_true",
+                    help="fail (exit nonzero) unless tuned <= default for "
+                         "the decode cell — the nightly serve-hot-path gate")
     args = ap.parse_args()
     main(smoke=args.smoke, budget=args.budget, reps=args.reps,
-         store_path=args.store, seed=args.seed)
+         store_path=args.store, seed=args.seed,
+         assert_decode_win=args.assert_decode_win)

@@ -88,6 +88,31 @@ def bench_hot_resolve(path: str, n: int) -> float:
     return (dt / n) * 1e6
 
 
+def bench_decode_kernel_resolve(path: str, n: int) -> float:
+    """HotConfigSource.refresh() over the DECODE kernel cell (ISSUE 8): the
+    per-poll cost of keeping the per-token flash-decode blocks live while
+    serving. Imports jax lazily — the rest of this bench stays jax-free."""
+    from repro.kernels.tuning import decode_cell
+    cell = decode_cell(1, 512, 4, 2, 16)
+    fp = SpaceFingerprint.of(cell.space, objective=cell.objective_id())
+    store = TuningRecordStore(os.path.join(path, "store"))
+    source = HotConfigSource.for_kernel_cell(os.path.join(path, "store"),
+                                             cell)
+    swaps = 0
+    t0 = time.perf_counter()
+    for seq in range(n):
+        idx = seq % cell.space.size
+        store.append(TuningRecord(
+            fp=fp.digest, run="bench", seq=seq, key=str(idx), idx=idx,
+            value=1.0 - seq * 1e-4, config=cell.space.config(idx)),
+            fingerprint=fp)
+        swaps += source.refresh() is not None
+    dt = time.perf_counter() - t0
+    store.close()
+    assert swaps == n
+    return (dt / n) * 1e6
+
+
 def main() -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
@@ -97,7 +122,9 @@ def main() -> dict:
     rows = {}
     for name, fn, unit in (("poll_quiet", bench_poll_quiet, "us/poll"),
                            ("tail_follow", bench_tail_follow, "records/s"),
-                           ("hot_resolve", bench_hot_resolve, "us/refresh")):
+                           ("hot_resolve", bench_hot_resolve, "us/refresh"),
+                           ("decode_kernel_resolve",
+                            bench_decode_kernel_resolve, "us/refresh")):
         d = tempfile.mkdtemp(prefix=f"loopbench-{name}-")
         try:
             val = fn(d, n)

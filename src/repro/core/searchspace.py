@@ -576,6 +576,7 @@ class GenerativeSpace(SearchSpace):
         self.size = cart
         self.X_norm = CodeNorm(self)
         self._accept_ewma = 1.0     # rejection-sampling acceptance estimate
+        self._accept_draws = 0      # uniform draws the EWMA has folded
         self._anchor_codes: Optional[np.ndarray] = None
         self._anchor_norm: Optional[np.ndarray] = None
         self._nbr_cache: Dict[Tuple[str, int], np.ndarray] = {}
@@ -653,6 +654,7 @@ class GenerativeSpace(SearchSpace):
             kept = codes[self._feasible_mask(codes)]
             self._accept_ewma = (0.7 * self._accept_ewma
                                  + 0.3 * (len(kept) / batch))
+            self._accept_draws += batch
             attempts += batch
             if kept.size:
                 out.append(kept)
@@ -775,8 +777,19 @@ class GenerativeSpace(SearchSpace):
         return total
 
     def describe(self) -> str:
+        # the feasible count is never enumerated here — the only handle on
+        # it is the rejection sampler's acceptance EWMA, so it is reported
+        # as a loudly-labeled estimate (and not at all before any draws:
+        # the EWMA initializes optimistically at 1.0)
+        if self._accept_draws:
+            frac = (f"feasible fraction ~{self._accept_ewma:.3g} "
+                    f"(ESTIMATE: acceptance EWMA over {self._accept_draws} "
+                    f"uniform draws, not a count)")
+        else:
+            frac = "feasible fraction unknown (no sampling stats yet)"
         lines = [f"GenerativeSpace {self.name}: cartesian "
-                 f"{self.cartesian_size} ({self.dim} params, not enumerated)"]
+                 f"{self.cartesian_size} ({self.dim} params, not enumerated; "
+                 f"{frac})"]
         for p in self.params:
             vals = ", ".join(str(v) for v in p.values[:8])
             more = "..." if len(p.values) > 8 else ""

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core.searchspace import Param, SearchSpace
 from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_decode as _fd
 from repro.kernels import gemm as _gemm
 from repro.kernels import matern_gp as _mgp
 from repro.launch.roofline import VMEM_BYTES
@@ -81,6 +82,62 @@ def flash_valid(cfg: Dict, hd: int = 128, dtype_bytes: int = 2,
                 vmem_bytes: int = VMEM_BYTES) -> bool:
     return _fa.flash_vmem_bytes(cfg["block_q"], cfg["block_kv"], hd,
                                 dtype_bytes) <= vmem_bytes
+
+
+# -- flash decode (single-token cache attention) --------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_kv",
+                                             "num_splits", "combine",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_pos, cur_pos, window=None,
+                     block_kv=512, num_splits=1, combine="jax",
+                     interpret=None):
+    """Split-KV flash decode over the cache, semantics-matched to
+    ``models.layers._decode_attention``: q (B, 1, H, hd), caches
+    (B, S, KV, hd), ``cache_pos`` (B, S) absolute positions (-1 = empty
+    slot), ``cur_pos`` (B,) the position being decoded. Slot validity —
+    empty, future, or evicted by a rolling ``window`` — becomes an additive
+    f32 bias row (0 / -inf), and caches whose capacity doesn't tile into
+    ``num_splits × block_kv`` are padded with masked slots, so any capacity
+    and occupancy runs. Returns (B, 1, H, hd).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    B, _, H, hd = q.shape
+    S = k_cache.shape[1]
+    valid = (cache_pos >= 0) & (cache_pos <= cur_pos[:, None])
+    if window is not None:
+        valid &= cache_pos > cur_pos[:, None] - window
+    bias = jnp.where(valid, 0.0, -jnp.inf).astype(jnp.float32)
+    tile = num_splits * block_kv
+    pad = (-S) % tile
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    out = _fd.flash_decode(q[:, 0], k_cache, v_cache, bias,
+                           block_kv=block_kv, num_splits=num_splits,
+                           combine=combine, interpret=interpret)
+    return out[:, None]
+
+
+def decode_config_space(S: int = 2048) -> SearchSpace:
+    """BO target for the decode cell: KV tile length, split count, and the
+    cross-split combine strategy. ``S`` is the cache capacity; splits whose
+    leading tiles already cover the whole cache are pure overhead and
+    constrained out (padding makes any remaining combination runnable)."""
+    params = [Param("block_kv", (128, 256, 512, 1024)),
+              Param("num_splits", (1, 2, 4, 8)),
+              Param("combine", _fd.COMBINE_STRATEGIES)]
+    cons = [lambda c: c["block_kv"] * (c["num_splits"] - 1) < S]
+    return SearchSpace(params, cons, name="pallas_flash_decode")
+
+
+def decode_valid(cfg: Dict, G: int = 1, hd: int = 128, dtype_bytes: int = 2,
+                 vmem_bytes: int = VMEM_BYTES) -> bool:
+    return _fd.decode_vmem_bytes(cfg["block_kv"], G, hd,
+                                 dtype_bytes) <= vmem_bytes
 
 
 # -- Matérn GP posterior ---------------------------------------------------

@@ -38,7 +38,7 @@ from repro.core.searchspace import SearchSpace
 from repro.kernels import ops
 from repro.launch.roofline import VMEM_BYTES
 
-KERNEL_NAMES = ("gemm", "flash", "gp")
+KERNEL_NAMES = ("gemm", "flash", "decode", "gp")
 
 
 def device_kind() -> str:
@@ -127,6 +127,48 @@ def flash_cell(B: int = 1, S: int = 1024, H: int = 4, hd: int = 64,
         meta={"B": B, "S": S, "H": H, "hd": hd, "dtype_bytes": dtype_bytes})
 
 
+def decode_cell(B: int = 4, S: int = 2048, H: int = 8, KV: int = 2,
+                hd: int = 64, fill: float = 0.95, window: Optional[int] = None,
+                dtype=jnp.float32, interpret: Optional[bool] = None,
+                seed: int = 0) -> KernelCell:
+    """The per-token serve hot path: split-KV flash decode over a KV cache
+    of capacity ``S`` at ``fill`` occupancy (empty slots carry
+    ``cache_pos = -1`` exactly like a live server's cache). Shape key =
+    cache capacity × heads × KV heads × head dim × batch."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), dtype)
+    cur = max(int(S * fill) - 1, 0)
+    pos = np.where(np.arange(S) <= cur, np.arange(S), -1)
+    cache_pos = jnp.asarray(np.broadcast_to(pos, (B, S)).copy(), jnp.int32)
+    cur_pos = jnp.full((B,), cur, jnp.int32)
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    G = H // max(KV, 1)
+
+    def run(cfg):
+        return ops.decode_attention(q, k, v, cache_pos, cur_pos,
+                                    window=window,
+                                    block_kv=cfg["block_kv"],
+                                    num_splits=cfg["num_splits"],
+                                    combine=cfg["combine"],
+                                    interpret=interpret)
+
+    def valid(cfg, vmem_bytes):
+        # padding tiles any capacity, but splits past the cache are pure
+        # combine overhead — the alignment face of the resource model
+        covered = cfg["block_kv"] * (cfg["num_splits"] - 1) < S
+        return covered and ops.decode_valid(cfg, G, hd, dtype_bytes,
+                                            vmem_bytes)
+
+    return KernelCell(
+        kernel="decode", shape_sig=f"B{B}_S{S}_H{H}_KV{KV}_hd{hd}",
+        space=ops.decode_config_space(S), run=run, valid=valid,
+        default={"block_kv": 512, "num_splits": 1, "combine": "jax"},
+        meta={"B": B, "S": S, "H": H, "KV": KV, "hd": hd, "fill": fill,
+              "window": window, "dtype_bytes": dtype_bytes})
+
+
 def gp_cell(N: int = 4096, T: int = 128, d: int = 15, t_obs: int = 37,
             nu: str = "matern32", ell: float = 2.0,
             interpret: Optional[bool] = None, seed: int = 0) -> KernelCell:
@@ -159,13 +201,13 @@ def gp_cell(N: int = 4096, T: int = 128, d: int = 15, t_obs: int = 37,
 
 
 def default_cells(smoke: bool = False) -> Tuple[KernelCell, ...]:
-    """The standard three-cell matrix ``benchmarks/kernel_tuning.py`` runs.
+    """The standard four-cell matrix ``benchmarks/kernel_tuning.py`` runs.
     Smoke shapes keep interpret-mode timing tractable on CPU CI."""
     if smoke:
         return (gemm_cell(256, 256, 256), flash_cell(1, 512, 2, 64),
-                gp_cell(2048, 128, 15))
+                decode_cell(1, 512, 4, 2, 64), gp_cell(2048, 128, 15))
     return (gemm_cell(512, 512, 512), flash_cell(1, 1024, 4, 64),
-            gp_cell(4096, 128, 15))
+            decode_cell(4, 2048, 8, 2, 64), gp_cell(4096, 128, 15))
 
 
 # -- the measured objective --------------------------------------------------
@@ -301,3 +343,28 @@ def kernel_config_from_store(store, *, S: int, hd: int,
     if not ops.flash_valid({"block_q": bq, "block_kv": bkv}, hd):
         return None
     return KernelConfig(use_flash=True, flash_block_q=bq, flash_block_kv=bkv)
+
+
+def decode_kernel_config_from_store(store, *, cache_cap: int, H: int, KV: int,
+                                    hd: int, device: Optional[str] = None,
+                                    base=None):
+    """Resolve tuned decode blocks for a serving cell's cache shape from
+    stored decode-cell tunings, overlaid on ``base`` (so a server can carry
+    both tuned flash AND tuned decode blocks in one ``KernelConfig``).
+    None when no stored record is usable for this cache (caller keeps the
+    pure-JAX decode path)."""
+    from repro.parallel.sharding import KernelConfig
+    hit = best_kernel_config(store, "decode", None, device)
+    if hit is None:
+        return None
+    cfg = hit[0]
+    bkv, ns = int(cfg["block_kv"]), int(cfg["num_splits"])
+    if bkv * (ns - 1) >= cache_cap:
+        return None             # tuned splits overhang this server's cache
+    G = H // max(KV, 1)
+    if not ops.decode_valid({"block_kv": bkv}, G, hd):
+        return None
+    base = base if base is not None else KernelConfig()
+    return base.replace(use_decode=True, decode_block_kv=bkv,
+                        decode_num_splits=ns,
+                        decode_combine=str(cfg["combine"]))

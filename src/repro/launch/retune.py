@@ -37,6 +37,8 @@ _KERNEL_RE = re.compile(
 #: shape-signature grammars of the kernel cell factories (kernels/tuning.py)
 _GEMM_SIG = re.compile(r"^(?P<M>\d+)x(?P<N>\d+)x(?P<K>\d+)$")
 _FLASH_SIG = re.compile(r"^B(?P<B>\d+)_S(?P<S>\d+)_H(?P<H>\d+)_hd(?P<hd>\d+)$")
+_DECODE_SIG = re.compile(r"^B(?P<B>\d+)_S(?P<S>\d+)_H(?P<H>\d+)"
+                         r"_KV(?P<KV>\d+)_hd(?P<hd>\d+)$")
 _GP_SIG = re.compile(r"^N(?P<N>\d+)_T(?P<T>\d+)_d(?P<d>\d+)$")
 
 
@@ -77,6 +79,13 @@ def kernel_objective_for(key: str):
         if sm:
             cell = KT.flash_cell(int(sm.group("B")), int(sm.group("S")),
                                  int(sm.group("H")), int(sm.group("hd")))
+            return KT.KernelObjective(cell, device=device)
+    elif name == "decode":
+        sm = _DECODE_SIG.match(sig)
+        if sm:
+            cell = KT.decode_cell(int(sm.group("B")), int(sm.group("S")),
+                                  int(sm.group("H")), int(sm.group("KV")),
+                                  int(sm.group("hd")))
             return KT.KernelObjective(cell, device=device)
     elif name == "gp":
         sm = _GP_SIG.match(sig)

@@ -92,7 +92,9 @@ class DecodeServer:
         kc = p.kernel
         kernel = (() if kc is None else
                   ("flash", kc.use_flash, kc.flash_block_q,
-                   kc.flash_block_kv, kc.interpret))
+                   kc.flash_block_kv, "decode", kc.use_decode,
+                   kc.decode_block_kv, kc.decode_num_splits,
+                   kc.decode_combine, kc.interpret))
         return (p.remat, p.microbatches, p.attn_block_q, p.attn_block_kv,
                 p.attn_q_chunks, p.capacity_factor, p.logits_chunk,
                 p.opt_moment_dtype, p.scan_layers, p.flash_threshold,
@@ -120,6 +122,16 @@ class DecodeServer:
         self.pcfg = apply_kernel_config(self.pcfg, cfg_dict)
         self._derive()
         self.kernel_swaps += 1
+
+    @property
+    def decode_dispatch(self) -> str:
+        """Which implementation the next decode step's attention runs on —
+        ``"pallas"`` when the flash-decode dispatch gate is open, ``"jax"``
+        otherwise. Surfaced per-step by ``ServeStats``."""
+        from repro.models.layers import _pallas_decode_ok
+        hd = self.cfg.resolved_head_dim
+        return ("pallas" if _pallas_decode_ok(hd, hd, self.pcfg.kernel)
+                else "jax")
 
     def input_batch(self):
         cfg, B = self.cfg, self.batch_size
@@ -194,8 +206,8 @@ def main() -> None:
     ap.add_argument("--kernels", action="store_true",
                     help="resolve tuned Pallas kernel block configs from "
                          "--store and dispatch through them (prefill flash "
-                         "attention); in --online mode also tail the store "
-                         "for kernel hot-swaps")
+                         "attention + per-token flash decode); in --online "
+                         "mode also tail the store for kernel hot-swaps")
     ap.add_argument("--swap-margin", type=float, default=0.0,
                     help="hot-reload hysteresis: a same-tier better record "
                          "must improve the roofline step time by MORE than "
@@ -226,24 +238,55 @@ def main() -> None:
     elif args.store:
         pcfg = resolve_pcfg(pcfg, args.store, args.arch, args.tuned_shape)
 
-    kernel_source = None
+    kernel_sources = []
     if args.kernels and args.store:
         from repro.kernels import tuning as ktuning
         hd = cfg.resolved_head_dim
+        cache_cap = args.prompt_len + args.decode_steps
+        kv_heads = cfg.num_kv_heads or cfg.num_heads
         kcfg = ktuning.kernel_config_from_store(args.store,
                                                 S=args.prompt_len, hd=hd)
         if kcfg is None:
-            print("[serve] no usable kernel tuning record in store — "
-                  "pure-JAX kernels")
+            print("[serve] no usable flash (prefill) kernel record in "
+                  "store — pure-JAX prefill attention")
         else:
-            print(f"[serve] tuned kernel config from store: {kcfg}")
+            print(f"[serve] tuned flash (prefill) blocks from store: {kcfg}")
             pcfg = pcfg.replace(kernel=kcfg)
+        dcfg = ktuning.decode_kernel_config_from_store(
+            args.store, cache_cap=cache_cap, H=cfg.num_heads, KV=kv_heads,
+            hd=hd, base=pcfg.kernel)
+        if dcfg is None:
+            print("[serve] no usable decode kernel record in store — "
+                  "pure-JAX decode attention")
+        else:
+            print(f"[serve] tuned decode blocks from store: "
+                  f"block_kv={dcfg.decode_block_kv} "
+                  f"num_splits={dcfg.decode_num_splits} "
+                  f"combine={dcfg.decode_combine}")
+            pcfg = pcfg.replace(kernel=dcfg)
         if args.online:
-            cell = ktuning.flash_cell(args.batch, args.prompt_len,
-                                      cfg.num_heads, hd)
-            kernel_source = HotConfigSource.for_kernel_cell(
-                args.store, cell, swap_margin=args.swap_margin)
-            kernel_source.refresh()
+            def _cell(mk, *a):
+                # a shape the kernel's config space cannot tile at all
+                # (e.g. prompt shorter than every flash block) has no cell
+                # to watch — skip the source, keep serving
+                try:
+                    return mk(*a)
+                except ValueError as e:
+                    print(f"[serve] no tunable kernel cell for this shape "
+                          f"({e}) — skipping hot-swap source")
+                    return None
+
+            fcell = _cell(ktuning.flash_cell, args.batch, args.prompt_len,
+                          cfg.num_heads, hd)
+            dcell = _cell(ktuning.decode_cell, args.batch, cache_cap,
+                          cfg.num_heads, kv_heads, hd)
+            for cell in (fcell, dcell):
+                if cell is None:
+                    continue
+                src = HotConfigSource.for_kernel_cell(
+                    args.store, cell, swap_margin=args.swap_margin)
+                src.refresh()
+                kernel_sources.append(src)
 
     server = DecodeServer(cfg, pcfg, batch=args.batch,
                           prompt_len=args.prompt_len,
@@ -273,7 +316,7 @@ def main() -> None:
                                cell_key=source.objective_id,
                                poll_every=args.poll_every,
                                first_step_warmup=True,
-                               kernel_source=kernel_source)
+                               kernel_sources=kernel_sources)
         t0 = time.time()
         stats = loop.run(args.decode_steps)
         dt = time.time() - t0
@@ -289,6 +332,8 @@ def main() -> None:
         print(f"[serve] online: {recorder.count} prod records, "
               f"{len(stats.swaps)} hot reloads, "
               f"{stats.retunes_requested} re-tune requests submitted")
+        print(f"[serve] decode dispatch: {stats.decode_steps_pallas} steps "
+              f"Pallas flash-decode, {stats.decode_steps_jax} pure-JAX")
         for tk in queue.open_tickets():
             print(f"[serve] drift: observed {tk.observed*1e3:.1f} ms/step "
                   f"vs {tk.predicted*1e3:.1f} ms predicted — durable "

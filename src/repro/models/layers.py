@@ -183,6 +183,27 @@ def _pallas_flash_attention(q, k, v, kc):
         causal=True, interpret=kc.interpret)
 
 
+def _pallas_decode_ok(hd: int, hd_v: int, kc) -> bool:
+    """Static preconditions for the Pallas flash-decode kernel: opted in via
+    KernelConfig and equal k/v head dims (the split kernel accumulates one
+    (G, hd) layout — the MLA ``dn+dr != dv`` variant stays pure-JAX).
+    Windows, rolling caches, partial occupancy, and capacities that don't
+    tile into the tuned blocks are all handled inside the kernel wrapper
+    (validity-bias + padding), so they don't gate dispatch."""
+    return kc is not None and kc.use_decode and hd == hd_v
+
+
+def _pallas_decode_attention(q, k_cache, v_cache, *, cache_pos, cur_pos,
+                             window, kc):
+    """Dispatch one decode step into the tuned split-KV flash-decode kernel
+    (semantics-matched to ``_decode_attention``; parity pinned in tests)."""
+    from repro.kernels import ops as kernel_ops
+    return kernel_ops.decode_attention(
+        q, k_cache, v_cache, cache_pos, cur_pos, window=window,
+        block_kv=kc.decode_block_kv, num_splits=kc.decode_num_splits,
+        combine=kc.decode_combine, interpret=kc.interpret)
+
+
 def _decode_attention(q, k_cache, v_cache, *, cache_pos, cur_pos, window, scale):
     """Single-token attention over a cache. q (B,1,H,hd), cache (B,S,KV,hd).
 
@@ -230,8 +251,14 @@ def gqa_attention(p, x, *, cfg: ArchConfig, px: ShardCtx, mode: str,
         k_cache = _insert_slot(cache["k"], k, slot)
         v_cache = _insert_slot(cache["v"], v, slot)
         cache_pos = _insert_slot(cache["pos"], positions, slot)
-        out = _decode_attention(q, k_cache, v_cache, cache_pos=cache_pos,
-                                cur_pos=positions[:, 0], window=window, scale=scale)
+        if _pallas_decode_ok(hd, v.shape[-1], px.pcfg.kernel):
+            out = _pallas_decode_attention(
+                q, k_cache, v_cache, cache_pos=cache_pos,
+                cur_pos=positions[:, 0], window=window, kc=px.pcfg.kernel)
+        else:
+            out = _decode_attention(q, k_cache, v_cache, cache_pos=cache_pos,
+                                    cur_pos=positions[:, 0], window=window,
+                                    scale=scale)
         new_cache = {"k": k_cache, "v": v_cache, "pos": cache_pos}
     else:
         q_pos = positions

@@ -62,6 +62,10 @@ class KernelConfig:
     use_flash: bool = False          # Pallas flash_attention on train/prefill
     flash_block_q: int = 512
     flash_block_kv: int = 512
+    use_decode: bool = False         # Pallas flash_decode on the serve hot path
+    decode_block_kv: int = 512
+    decode_num_splits: int = 1
+    decode_combine: str = "jax"      # cross-split merge: "jax" | "kernel"
     interpret: Optional[bool] = None  # None = auto (interpret off-TPU)
 
     def replace(self, **kw) -> "KernelConfig":

@@ -68,14 +68,25 @@ def apply_sharding_config(pcfg, cfg: Dict[str, Any]):
 
 
 def apply_kernel_config(pcfg, cfg: Dict[str, Any]):
-    """Overlay a stored *kernel-cell* block config (DESIGN.md §14) onto a
-    ParallelConfig as a ``KernelConfig``. Flash-cell keys (``block_q``/
-    ``block_kv``) enable Pallas flash dispatch; a config carrying neither
-    (e.g. a gemm cell's) leaves the kernel field untouched."""
+    """Overlay a stored *kernel-cell* block config (DESIGN.md §14/§16) onto
+    a ParallelConfig as a ``KernelConfig``. Decode-cell keys
+    (``num_splits``/``combine``) enable Pallas flash-decode dispatch;
+    flash-cell keys (``block_q``/``block_kv`` without split keys) enable
+    Pallas flash; a config carrying neither shape of key (e.g. a gemm
+    cell's) leaves the kernel field untouched. Overlays compose: applying a
+    decode config on top of a flash-enabled KernelConfig keeps the flash
+    blocks (and vice versa), so one server carries both tuned paths."""
     from repro.parallel.sharding import KernelConfig
+    base = pcfg.kernel or KernelConfig()
+    if "num_splits" in cfg or "combine" in cfg:
+        return pcfg.replace(kernel=base.replace(
+            use_decode=True,
+            decode_block_kv=int(cfg.get("block_kv", base.decode_block_kv)),
+            decode_num_splits=int(cfg.get("num_splits",
+                                          base.decode_num_splits)),
+            decode_combine=str(cfg.get("combine", base.decode_combine))))
     if "block_q" not in cfg and "block_kv" not in cfg:
         return pcfg
-    base = pcfg.kernel or KernelConfig()
     return pcfg.replace(kernel=base.replace(
         use_flash=True,
         flash_block_q=int(cfg.get("block_q", base.flash_block_q)),

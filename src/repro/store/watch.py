@@ -491,6 +491,11 @@ class ServeStats:
         default_factory=list)          # (global step, block config, step time)
     retunes_requested: int = 0
     kernel_retunes_requested: int = 0
+    #: decode steps served by the Pallas flash-decode path vs the pure-JAX
+    #: fallback (servers expose ``decode_dispatch``; a data plane without
+    #: the attribute counts as pure-JAX — it IS the fallback)
+    decode_steps_pallas: int = 0
+    decode_steps_jax: int = 0
 
 
 class OnlineServeLoop:
@@ -513,10 +518,18 @@ class OnlineServeLoop:
                  retune_queue=None, cell_key: str = "",
                  poll_every: int = 1, clock=time.time,
                  first_step_warmup: bool = False,
-                 kernel_source: Optional[HotConfigSource] = None):
+                 kernel_source: Optional[HotConfigSource] = None,
+                 kernel_sources: Optional[List[HotConfigSource]] = None):
         self.server = server
         self.source = source
-        self.kernel_source = kernel_source
+        # one loop can watch several kernel cells (flash + decode), each
+        # hot-swapping and stale-enqueuing independently; ``kernel_source``
+        # (singular) is the original single-cell spelling
+        self.kernel_sources: List[HotConfigSource] = list(kernel_sources or ())
+        if kernel_source is not None:
+            self.kernel_sources.insert(0, kernel_source)
+        self.kernel_source = (self.kernel_sources[0]
+                              if self.kernel_sources else None)
         self.recorder = recorder
         self.monitor = monitor
         self.retune_queue = retune_queue
@@ -556,17 +569,17 @@ class OnlineServeLoop:
         hysteresis inside the source) but does NOT rebase the drift monitor:
         the roofline prediction judges the *sharding* config, and a kernel
         block change doesn't invalidate it."""
-        hit = (self.kernel_source.refresh()
-               if self.kernel_source is not None else None)
-        if hit is None:
-            return
-        cfg, value = hit
         apply = getattr(self.server, "apply_kernel_config", None)
-        if apply is None:
-            return       # data plane has no kernel dispatch (e.g. old stub)
-        apply(cfg)
-        self._warmup = True        # first post-swap step pays the re-jit
-        stats.kernel_swaps.append((self.step, dict(cfg), value))
+        for src in self.kernel_sources:
+            hit = src.refresh()
+            if hit is None:
+                continue
+            cfg, value = hit
+            if apply is None:
+                continue     # data plane has no kernel dispatch (e.g. old stub)
+            apply(cfg)
+            self._warmup = True    # first post-swap step pays the re-jit
+            stats.kernel_swaps.append((self.step, dict(cfg), value))
 
     def _maybe_retune_kernel(self, stats: ServeStats) -> None:
         """Kernel-cell staleness → durable retune request: while no exact
@@ -576,16 +589,17 @@ class OnlineServeLoop:
         poll costs one open-ticket lookup, not duplicate work; after a
         daemon services the request, the tuned record lands, ``stale``
         flips, and submissions stop."""
-        if (self.kernel_source is None or self.retune_queue is None
-                or not self.kernel_source.stale):
+        if self.retune_queue is None:
             return
         from repro.core.engine import RetuneRequest
-        accepted = self.retune_queue.submit(RetuneRequest(
-            key=self.kernel_source.objective_id,
-            objective=self.kernel_source.objective_id,
-            observed=math.nan, predicted=math.nan,
-            reason="stale", t=float(self.clock())))
-        stats.kernel_retunes_requested += int(accepted)
+        for src in self.kernel_sources:
+            if not src.stale:
+                continue
+            accepted = self.retune_queue.submit(RetuneRequest(
+                key=src.objective_id, objective=src.objective_id,
+                observed=math.nan, predicted=math.nan,
+                reason="stale", t=float(self.clock())))
+            stats.kernel_retunes_requested += int(accepted)
 
     def run(self, steps: int) -> ServeStats:
         stats = ServeStats()
@@ -597,6 +611,10 @@ class OnlineServeLoop:
             dt = self.server.decode_step()
             stats.steps += 1
             stats.latencies.append(dt)
+            if getattr(self.server, "decode_dispatch", "jax") == "pallas":
+                stats.decode_steps_pallas += 1
+            else:
+                stats.decode_steps_jax += 1
             if self._warmup:
                 # the first post-swap step includes the re-jit: neither
                 # telemetry the warm start should learn from nor a latency

@@ -36,6 +36,9 @@ ARCH, SHAPE, MESH = "internlm2-1.8b", "decode_32k", "single"
 #: repro.kernels.tuning.kernel_cell_objective, device pinned to "sim" so the
 #: harness stays jax-free
 KERNEL_OBJECTIVE_ID = "kernel[flash×sim×sim]"
+#: simulated decode-cell objective id (DESIGN.md §16) — the per-token serve
+#: hot path's kernel cell, watched alongside the flash one by the same loop
+DECODE_OBJECTIVE_ID = "kernel[decode×sim×sim]"
 
 
 class VirtualClock:
@@ -86,6 +89,14 @@ class StubDecodeServer:
         self.derives = 0             # distinct step-fn derivations (re-jits)
         self._derived = set()        # mimics DecodeServer's kernel cache
 
+    @property
+    def decode_dispatch(self) -> str:
+        """Mirrors DecodeServer: a deployed decode-cell block config
+        (split keys present) opens the Pallas flash-decode gate."""
+        kc = self.kernel_config
+        return ("pallas" if kc is not None and "num_splits" in kc
+                else "jax")
+
     def _derive(self) -> None:
         key = (config_key(self.config), config_key(self.kernel_config))
         if key not in self._derived:
@@ -121,6 +132,7 @@ class LoopSim:
                  drift_stat: str = "median", poll_every: int = 1,
                  surface_seed: int = 0, swap_margin: float = 0.0,
                  durable_queue: bool = False, kernel_cell: bool = False,
+                 decode_kernel_cell: bool = False,
                  kernel_swap_margin: float = 0.0):
         self.clock = VirtualClock()
         self.space = sharding_space(arch, shape)
@@ -149,6 +161,7 @@ class LoopSim:
             from repro.core.engine import RetuneQueue
             self.queue = RetuneQueue()
         self.kernel_source = None
+        self.decode_kernel_source = None
         if kernel_cell:
             # a simulated flash kernel cell sharing the store: same grids as
             # ops.flash_config_space, jax-free
@@ -164,11 +177,31 @@ class LoopSim:
                 store_path, "", "", space=self.kernel_space,
                 objective_id=KERNEL_OBJECTIVE_ID,
                 swap_margin=kernel_swap_margin)
+        if decode_kernel_cell:
+            # the decode cell's simulated twin: same grids as
+            # ops.decode_config_space, jax-free
+            from repro.core.searchspace import Param, SearchSpace
+            self.decode_kernel_space = SearchSpace(
+                [Param("block_kv", (128, 256, 512)),
+                 Param("num_splits", (1, 2, 4)),
+                 Param("combine", ("jax", "kernel"))],
+                name="pallas_flash_decode")
+            self.decode_kernel_times = cell_surface(self.decode_kernel_space,
+                                                    seed=surface_seed + 11)
+            self.decode_kernel_fp = SpaceFingerprint.of(
+                self.decode_kernel_space, objective=DECODE_OBJECTIVE_ID)
+            self.decode_kernel_source = HotConfigSource(
+                store_path, "", "", space=self.decode_kernel_space,
+                objective_id=DECODE_OBJECTIVE_ID,
+                swap_margin=kernel_swap_margin)
         self.loop = OnlineServeLoop(
             self.server, self.source, recorder=self.recorder,
             monitor=self.monitor, retune_queue=self.queue,
             cell_key=self.objective_id, poll_every=poll_every,
-            clock=self.clock, kernel_source=self.kernel_source)
+            clock=self.clock, kernel_source=self.kernel_source,
+            kernel_sources=([self.decode_kernel_source]
+                            if self.decode_kernel_source is not None
+                            else None))
         self._tuner_seq = 0
 
     def _latency_of(self, config) -> float:
@@ -196,6 +229,19 @@ class LoopSim:
             value=float(self.kernel_times[idx]),
             config=self.kernel_space.config(int(idx)), t=self.clock()),
             fingerprint=self.kernel_fp)
+        self._tuner_seq += 1
+
+    def append_decode_kernel_record(self, idx: int,
+                                    run: str = "sim-dtune") -> None:
+        """A kernel tuner lands one measured decode block-config step time
+        for the simulated decode cell (requires ``decode_kernel_cell=True``)."""
+        self.store.append(TuningRecord(
+            fp=self.decode_kernel_fp.digest, run=run, seq=self._tuner_seq,
+            key=str(int(idx)), idx=int(idx),
+            value=float(self.decode_kernel_times[idx]),
+            config=self.decode_kernel_space.config(int(idx)),
+            t=self.clock()),
+            fingerprint=self.decode_kernel_fp)
         self._tuner_seq += 1
 
     def seal_segment(self) -> None:

@@ -383,3 +383,25 @@ def test_narrow_and_non_moe_wide_spaces_stay_enumerated():
     assert type(narrow) is SearchSpace
     wide_dense = sharding_space("internlm2-1.8b", "train_4k", wide=True)
     assert type(wide_dense) is SearchSpace   # small grid: vectorized path
+
+
+def test_describe_reports_estimated_feasible_fraction():
+    """describe() surfaces the rejection sampler's acceptance EWMA as a
+    loudly-labeled ESTIMATE of the feasible fraction — and admits ignorance
+    before any draws exist (the EWMA initializes optimistically at 1.0, so
+    printing it unsampled would claim a fully feasible space)."""
+    gen = GenerativeSpace([Param("a", tuple(range(16))),
+                           Param("b", tuple(range(16)))],
+                          [lambda c: c["a"] > c["b"]], name="halfspace")
+    before = gen.describe()
+    assert "unknown" in before and "ESTIMATE" not in before
+
+    rng = np.random.default_rng(0)
+    gen.sample_feasible(rng, 64)
+    after = gen.describe()
+    assert "ESTIMATE" in after and "draws" in after
+    # a > b over a 16x16 grid keeps 120/256 ~ 0.47; the EWMA (warmed from
+    # its optimistic 1.0 start) must land in a loose band around it
+    assert 0.2 < gen._accept_ewma < 0.9
+    frac = f"{gen._accept_ewma:.3g}"
+    assert frac in after

@@ -201,3 +201,90 @@ def test_malformed_kernel_cell_keys_fail_loud():
             kernel_objective_for(bad)
     with pytest.raises(ValueError):
         cell_objective_for("not-a-cell-key")
+
+
+# -- decode cell (ISSUE 8) ---------------------------------------------------
+
+def tiny_decode_cell(**kw):
+    kw.setdefault("B", 1)
+    kw.setdefault("S", 128)
+    kw.setdefault("H", 4)
+    kw.setdefault("KV", 2)
+    kw.setdefault("hd", 16)
+    return kt.decode_cell(**kw)
+
+
+def test_decode_cell_invalid_configs_are_nan():
+    """Both faces of the decode resource model journal as NaN: VMEM
+    overflow, and split counts whose leading tiles overhang the cache."""
+    cell = tiny_decode_cell()
+    obj = kt.KernelObjective(cell, reps=1, vmem_bytes=64)     # nothing fits
+    assert math.isnan(obj(0))
+    obj = kt.KernelObjective(cell, reps=1)
+    overhang = {"block_kv": 128, "num_splits": 4, "combine": "jax"}
+    assert not cell.valid(overhang, obj.vmem_bytes)
+    assert math.isnan(obj.eval_config(overhang))
+
+
+def test_decode_cell_valid_config_measures_positive_time():
+    cell = tiny_decode_cell()
+    obj = kt.KernelObjective(cell, reps=1)
+    v = obj.eval_config({"block_kv": 128, "num_splits": 1, "combine": "jax"})
+    assert math.isfinite(v) and v > 0
+
+
+def test_decode_cell_in_default_matrix():
+    for smoke in (True, False):
+        cells = kt.default_cells(smoke=smoke)
+        assert [c.kernel for c in cells] == list(kt.KERNEL_NAMES)
+
+
+def test_decode_kernel_config_from_store(store):
+    from repro.parallel.sharding import KernelConfig
+    cell = tiny_decode_cell()
+    kt.run_kernel_tuning(cell, store, budget=4, init=2, reps=1, seed=0)
+    kc = kt.decode_kernel_config_from_store(
+        store, cache_cap=128, H=4, KV=2, hd=16)
+    assert kc is not None and kc.use_decode
+    assert kc.decode_block_kv * (kc.decode_num_splits - 1) < 128
+    # overlay composes: flash fields of the base survive
+    base = KernelConfig(use_flash=True, flash_block_q=128)
+    kc2 = kt.decode_kernel_config_from_store(
+        store, cache_cap=128, H=4, KV=2, hd=16, base=base)
+    assert kc2.use_flash and kc2.flash_block_q == 128 and kc2.use_decode
+    # a tiny cache no stored split config can cover resolves to None
+    assert kt.decode_kernel_config_from_store(
+        store, cache_cap=0, H=4, KV=2, hd=16) is None
+
+
+def test_apply_kernel_config_decode_overlay():
+    from repro.parallel.sharding import ParallelConfig
+    from repro.store.resolve import apply_kernel_config
+    pcfg = ParallelConfig()
+    dec = {"block_kv": 256, "num_splits": 4, "combine": "kernel"}
+    out = apply_kernel_config(pcfg, dec)
+    assert out.kernel is not None and out.kernel.use_decode
+    assert not out.kernel.use_flash
+    assert out.kernel.decode_block_kv == 256
+    assert out.kernel.decode_num_splits == 4
+    assert out.kernel.decode_combine == "kernel"
+    # decode overlay on a flash-enabled config keeps the flash blocks,
+    # and a later flash overlay keeps the decode blocks (they compose)
+    both = apply_kernel_config(
+        apply_kernel_config(pcfg, {"block_q": 128, "block_kv": 128}), dec)
+    assert both.kernel.use_flash and both.kernel.flash_block_kv == 128
+    assert both.kernel.use_decode and both.kernel.decode_block_kv == 256
+    back = apply_kernel_config(both, {"block_q": 256, "block_kv": 512})
+    assert back.kernel.use_decode and back.kernel.decode_block_kv == 256
+    assert back.kernel.flash_block_q == 256
+
+
+def test_decode_cell_key_round_trips_to_objective():
+    from repro.launch.retune import cell_objective_for
+    cell = tiny_decode_cell()
+    key = cell.objective_id("tpu")
+    assert "kernel[decode×B1_S128_H4_KV2_hd16×tpu]" == key
+    obj = cell_objective_for(key)
+    assert isinstance(obj, kt.KernelObjective)
+    assert obj.name == key
+    assert obj.space.size == cell.space.size

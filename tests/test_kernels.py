@@ -261,3 +261,131 @@ def test_bo_strategy_runs_on_pallas_gp_backend():
                                 gp_block_n=128))
     res = run_strategy(strat, obj, budget=20, seed=0)
     assert res.best_value <= times.min() + 4.0   # found the basin
+
+
+# -- flash decode (single-token cache attention, ISSUE 8) --------------------
+
+def _decode_case(B, S, H, KV, hd, cur, *, window=None, rolling=False, seed=0):
+    """A cache state the way a live server produces it: contiguous fill to
+    ``cur`` (later slots empty, ``cache_pos == -1``), or a rolling window's
+    wrapped layout (slot s holds the latest position congruent to s)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    if rolling:
+        slots = np.arange(S)
+        pos = cur - ((cur - slots) % S)
+        pos = np.where(pos >= 0, pos, -1)
+    else:
+        pos = np.where(np.arange(S) <= cur, np.arange(S), -1)
+    cache_pos = jnp.asarray(np.broadcast_to(pos, (B, S)).copy(), jnp.int32)
+    cur_pos = jnp.full((B,), cur, jnp.int32)
+    return q, k, v, cache_pos, cur_pos
+
+
+@pytest.mark.parametrize("H,KV", [(4, 4), (4, 2), (4, 1)])
+@pytest.mark.parametrize("num_splits,block_kv,combine",
+                         [(1, 64, "jax"), (2, 32, "jax"), (4, 16, "kernel")])
+def test_decode_parity_gqa_and_splits(H, KV, num_splits, block_kv, combine):
+    """Kernel output must match the layers.py pure-JAX decode reference
+    across GQA head ratios and split/combine configurations."""
+    from repro.models.layers import _decode_attention
+    q, k, v, cp, cu = _decode_case(2, 128, H, KV, 16, cur=97)
+    ref_out = _decode_attention(q, k, v, cache_pos=cp, cur_pos=cu,
+                                window=None, scale=1.0 / np.sqrt(16))
+    out = ops.decode_attention(q, k, v, cp, cu, block_kv=block_kv,
+                               num_splits=num_splits, combine=combine,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("case", [
+    dict(B=2, S=128, H=4, KV=2, hd=16, cur=5),              # mostly empty
+    dict(B=1, S=100, H=4, KV=2, hd=16, cur=99),             # S % block != 0
+    dict(B=2, S=64, H=4, KV=2, hd=16, cur=150, window=24,
+         rolling=True),                                     # rolling window
+    dict(B=2, S=96, H=4, KV=1, hd=16, cur=40, window=16),   # window, no wrap
+])
+def test_decode_parity_occupancy_window_capacity(case):
+    """Validity-mask edges: partially-empty caches, capacities that don't
+    tile into block_kv (padded with masked slots), and windowed/rolling
+    caches — including splits that land entirely in masked territory."""
+    from repro.models.layers import _decode_attention
+    case = dict(case)
+    window = case.pop("window", None)
+    rolling = case.pop("rolling", False)
+    hd = case["hd"]
+    q, k, v, cp, cu = _decode_case(**case, window=window, rolling=rolling)
+    ref_out = _decode_attention(q, k, v, cache_pos=cp, cur_pos=cu,
+                                window=window, scale=1.0 / np.sqrt(hd))
+    for num_splits, block_kv, combine in [(1, 64, "jax"), (4, 16, "jax"),
+                                          (2, 32, "kernel"),
+                                          (8, 32, "kernel")]:
+        out = ops.decode_attention(q, k, v, cp, cu, window=window,
+                                   block_kv=block_kv, num_splits=num_splits,
+                                   combine=combine, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def _golden_decode_run(arch, kernel=None):
+    """The exact run tests/golden/decode_logits.json was captured with
+    (pre-PR code, ParallelConfig(kernel=None)); returns final-step logits."""
+    from repro.configs.registry import smoke_config
+    from repro.models.params import init_params
+    from repro.models.stepfn import make_decode_step, make_prefill_step
+    from repro.parallel.sharding import ParallelConfig, ShardCtx
+    cfg = smoke_config(arch)
+    px = ShardCtx(None, ParallelConfig(flash_threshold=1 << 30,
+                                       logits_chunk=0, kernel=kernel))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S, STEPS = 2, 8, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    prefill = jax.jit(make_prefill_step(cfg, px, cache_cap=S + STEPS))
+    decode = jax.jit(make_decode_step(cfg, px))
+    logits, cache = prefill(params, {"tokens": tokens})
+    toks = jnp.argmax(logits, -1)
+    for i in range(STEPS):
+        logits, cache = decode(params, cache, {"tokens": toks[:, None]},
+                               jnp.asarray(S + i, jnp.int32))
+        toks = jnp.argmax(logits, -1)
+    return np.asarray(logits, np.float32)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-moe-30b-a3b", "gemma-2b",
+                                  "recurrentgemma-9b"])
+def test_decode_kernel_none_byte_identical_to_golden(arch):
+    """Acceptance pin (ISSUE 8): with ``ParallelConfig.kernel=None`` the
+    decode path is BYTE-identical to the pre-PR capture — adding the Pallas
+    dispatch changed nothing for servers that don't opt in."""
+    import json, os
+    path = os.path.join(os.path.dirname(__file__), "golden",
+                        "decode_logits.json")
+    with open(path) as f:
+        golden = json.load(f)
+    got = _golden_decode_run(arch, kernel=None)
+    np.testing.assert_array_equal(got,
+                                  np.asarray(golden[arch], np.float32))
+
+
+def test_decode_kernel_dispatch_matches_pure_jax_end_to_end():
+    """The golden run re-executed WITH flash-decode dispatch must track the
+    pure-JAX decode within kernel tolerance (bf16 model dtype — same band
+    as the prefill dispatch test), across a GQA arch and the windowed
+    rolling-cache arch; and a config whose gate is closed (use_decode=False)
+    stays bitwise on the pure-JAX path."""
+    from repro.parallel.sharding import KernelConfig
+    for arch in ("qwen3-moe-30b-a3b", "recurrentgemma-9b"):
+        base = _golden_decode_run(arch, kernel=None)
+        kc = KernelConfig(use_decode=True, decode_block_kv=8,
+                          decode_num_splits=2, decode_combine="kernel")
+        got = _golden_decode_run(arch, kernel=kc)
+        denom = max(float(np.abs(base).max()), 1.0)
+        assert float(np.abs(got - base).max()) < 5e-3 * denom
+    closed = _golden_decode_run("gemma-2b",
+                               kernel=KernelConfig(use_decode=False))
+    np.testing.assert_array_equal(closed,
+                                  _golden_decode_run("gemma-2b", kernel=None))

@@ -458,3 +458,87 @@ def test_fresh_kernel_cell_never_enqueues(tmp_path):
     assert len(stats.kernel_swaps) == 1
     assert stats.kernel_retunes_requested == 0
     assert len(sim.queue) == 0
+
+
+def test_stale_decode_cell_retune_hot_swap_and_no_rejit_on_swap_back(tmp_path):
+    """The decode kernel cell rides the same control plane (ISSUE 8): a
+    serving cell whose flash-decode blocks were never tuned under its exact
+    fingerprint enqueues one durable retune; a daemon services it with the
+    decode cell's own objective; the result hot-swaps in mid-serve between
+    decode steps; and re-applying a previously-deployed decode config is a
+    compiled-kernel-cache hit — no spurious re-jit on swap-back."""
+    path = str(tmp_path / "store")
+    sim = LoopSim(path, decode_kernel_cell=True, durable_queue=True)
+    assert sim.decode_kernel_source.stale
+    assert sim.server.decode_dispatch == "jax"
+
+    stats = sim.serve(6)
+    assert stats.kernel_retunes_requested == 1, \
+        "stale decode cell enqueues once; per-cell dedupe absorbs later polls"
+    tickets = sim.queue.open_tickets()
+    assert [tk.key for tk in tickets] == [sim.decode_kernel_source.objective_id]
+    assert tickets[0].reason == "stale"
+    assert stats.decode_steps_jax == stats.steps, \
+        "every step so far served by the pure-JAX fallback"
+
+    from repro.core.objectives import SimulatedObjective
+    from repro.launch.retune import RetuneDaemon
+    dobj = SimulatedObjective(sim.decode_kernel_space,
+                              sim.decode_kernel_times,
+                              name=sim.decode_kernel_source.objective_id)
+    daemon = RetuneDaemon(path, objective_for=lambda key: dobj,
+                          budget=8, worker="dtune-daemon", clock=sim.clock)
+    assert daemon.step() is not None and daemon.step() is None
+
+    stats = sim.serve(6)
+    assert len(stats.kernel_swaps) == 1, "fleet hot-reloads the retune"
+    assert not sim.decode_kernel_source.stale
+    assert stats.kernel_retunes_requested == 0
+    assert len(sim.queue) == 0
+    assert sim.server.restarts == 0
+    tuned_cfg = dict(sim.server.kernel_config)
+    assert "num_splits" in tuned_cfg, "a decode-cell config was deployed"
+    assert sim.server.decode_dispatch == "pallas"
+    assert stats.decode_steps_pallas == stats.steps, \
+        "swap landed at the first poll, before any step: all Pallas"
+
+    # swap-back cycle: deploy a different decode config, then return to the
+    # tuned one — both are compiled-cache hits the second time around
+    other = int(np.argmax(sim.decode_kernel_times))
+    derives = sim.server.derives
+    sim.server.apply_kernel_config(sim.decode_kernel_space.config(other))
+    assert sim.server.derives == derives + 1      # first visit: one re-jit
+    sim.server.apply_kernel_config(tuned_cfg)
+    sim.server.apply_kernel_config(sim.decode_kernel_space.config(other))
+    assert sim.server.derives == derives + 1, \
+        "swap-back to either previously-derived config must not re-jit"
+
+
+def test_flash_and_decode_cells_coexist_independently(tmp_path):
+    """One loop watches both kernel cells: each hot-swaps from its own
+    objective id, both stale cells enqueue their own retune tickets, and a
+    record landing for one cell neither swaps nor un-stales the other."""
+    path = str(tmp_path / "store")
+    sim = LoopSim(path, kernel_cell=True, decode_kernel_cell=True,
+                  durable_queue=True)
+    stats = sim.serve(4)
+    assert stats.kernel_retunes_requested == 2, \
+        "both stale kernel cells enqueue their own durable ticket"
+    keys = sorted(tk.key for tk in sim.queue.open_tickets())
+    assert keys == sorted([sim.kernel_source.objective_id,
+                           sim.decode_kernel_source.objective_id])
+
+    # a flash record lands: only the flash source swaps / un-stales
+    sim.append_kernel_record(int(np.argmin(sim.kernel_times)))
+    stats = sim.serve(4)
+    assert len(stats.kernel_swaps) == 1
+    assert not sim.kernel_source.stale
+    assert sim.decode_kernel_source.stale
+    assert "block_q" in sim.server.kernel_config
+
+    # now a decode record: the decode source swaps without disturbing flash
+    sim.append_decode_kernel_record(int(np.argmin(sim.decode_kernel_times)))
+    stats = sim.serve(4)
+    assert len(stats.kernel_swaps) == 1
+    assert not sim.decode_kernel_source.stale
+    assert "num_splits" in sim.server.kernel_config

@@ -1,0 +1,129 @@
+"""Fleet control-plane benchmark: tuning-job throughput and duplicate
+services at 1/2/4 racing daemons (DESIGN.md §13, ISSUE 9 acceptance).
+
+The claim under measurement: the fenced ``TuningJobQueue`` scales a fleet
+WITHOUT duplicating work — N daemons draining one store-backed queue
+service every job exactly once (fencing tokens arbitrate every claim race),
+and the arbitration overhead (issue token + claim append + re-read + done
+append per job) stays cheap enough that queue throughput is not the
+bottleneck of a tuning fleet (real services run seconds to minutes; the
+control plane must sit orders of magnitude below that).
+
+Per daemon count the bench submits a mixed-type job batch into a fresh
+directory store, round-robins the daemons claim→done over it (service
+itself is a no-op: this isolates the CONTROL-PLANE cost, not the tuning
+run), and reports:
+
+  * jobs/sec drained across the fleet (claim + fenced done, per job);
+  * duplicate-service count — MUST be zero at every fleet width;
+  * fenced/rejected writes observed (zero in an uncontended round-robin).
+
+The committed numbers live in ``results/bench/fleet.json`` (full run,
+nightly); ``--smoke`` (CI) runs a small batch and asserts the exactly-once
+and sanity bars without writing.
+
+  PYTHONPATH=src python -m benchmarks.fleet_bench [--smoke] [--jobs N]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+
+from benchmarks.common import emit, save_json
+from repro.store import JOB_TYPES, TuningJobQueue, TuningRecordStore
+
+DAEMON_COUNTS = (1, 2, 4)
+
+
+class _Req:
+    def __init__(self, key: str, t: float):
+        self.key = key
+        self.objective = key
+        self.observed = 2.0
+        self.predicted = 1.0
+        self.reason = "bench"
+        self.t = t
+
+
+def bench_one(n_daemons: int, n_jobs: int) -> dict:
+    d = tempfile.mkdtemp(prefix=f"fleetbench-{n_daemons}-")
+    path = os.path.join(d, "store")
+    try:
+        store = TuningRecordStore(path, load=False)
+        submitter = TuningJobQueue(path, worker="submitter", appender=store)
+        t0 = time.perf_counter()
+        for i in range(n_jobs):
+            ok = submitter.submit(_Req(f"cell-{i:05d}", t=float(i + 1)),
+                                  job_type=JOB_TYPES[i % len(JOB_TYPES)])
+            assert ok
+        t_submit = time.perf_counter() - t0
+
+        daemons = [TuningJobQueue(path, worker=f"daemon-{i}",
+                                  appender=store)
+                   for i in range(n_daemons)]
+        serviced: dict = {}
+        duplicates = 0
+        t0 = time.perf_counter()
+        drained = 0
+        while drained < n_jobs:
+            progress = False
+            for q in daemons:
+                ticket = q.claim()
+                if ticket is None:
+                    continue
+                if ticket.key in serviced:
+                    duplicates += 1
+                serviced[ticket.key] = serviced.get(ticket.key, 0) + 1
+                q.done(ticket)          # no-op service: control-plane cost
+                drained += 1
+                progress = True
+            if not progress:
+                break
+        t_drain = time.perf_counter() - t0
+        fenced = sum(q.rejected_writes for q in daemons)
+        store.close()
+        return {"daemons": n_daemons, "jobs": n_jobs,
+                "drained": drained, "duplicate_services": duplicates,
+                "rejected_writes": fenced,
+                "submit_s": t_submit, "drain_s": t_drain,
+                "submits_per_s": n_jobs / max(t_submit, 1e-9),
+                "jobs_per_s": drained / max(t_drain, 1e-9)}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def main() -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: small batch, exactly-once + sanity bars only")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="jobs per fleet width (default: 24 smoke, 200 full)")
+    args = ap.parse_args()
+    n_jobs = args.jobs or (24 if args.smoke else 200)
+
+    rows = []
+    for n in DAEMON_COUNTS:
+        row = bench_one(n, n_jobs)
+        rows.append(row)
+        emit(f"fleet_drain_d{n}", row["drain_s"] * 1e6 / max(row["drained"], 1),
+             f"{row['jobs_per_s']:.0f} jobs/s, "
+             f"{row['duplicate_services']} duplicates, "
+             f"{row['rejected_writes']} fenced writes")
+        assert row["drained"] == n_jobs, \
+            f"{n} daemons drained {row['drained']}/{n_jobs} jobs"
+        assert row["duplicate_services"] == 0, \
+            f"{n} daemons produced {row['duplicate_services']} duplicate " \
+            "services — the fencing arbitration leaked a job"
+    if args.smoke:
+        assert all(r["jobs_per_s"] > 5 for r in rows), rows
+    else:
+        save_json("fleet", {"job_types": list(JOB_TYPES),
+                            "jobs_per_width": n_jobs, "rows": rows})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    main()

@@ -36,7 +36,7 @@ import time
 from collections import deque
 from concurrent.futures import Future, ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Deque, Dict, Optional
+from typing import Any, Deque, Dict, Optional
 
 import numpy as np
 
@@ -74,9 +74,10 @@ class RetuneQueue:
     key re-arms once the request is popped (taken by a tuner).
 
     This queue dies with its process; production serving uses the durable
-    store-backed ``repro.store.queue.DurableRetuneQueue`` (same ``submit``
-    interface), whose requests survive crashes and are claimed by a
-    separate ``repro.launch.retune`` daemon."""
+    store-backed ``repro.store.queue.TuningJobQueue`` (same ``submit``
+    interface), whose requests survive crashes and are claimed — under
+    fenced, exactly-once leases — by a fleet of ``repro.launch.retune``
+    daemons."""
 
     def __init__(self):
         self._lock = threading.Lock()
@@ -106,16 +107,23 @@ class RetuneQueue:
 
 
 def run_retune(request: RetuneRequest, objective: Objective, strategy, *,
-               store, budget: int, seed: int = 0, **engine_kw):
-    """Service one re-tune request: a warm-started engine run journaled into
-    the shared ``store`` under a request-derived run id. Prior records for
-    the cell — including the ``context="prod"`` telemetry that triggered the
-    request — seed the strategy through the standard warm-start path, so a
-    drift re-tune starts from everything serving has learned. The serving
-    fleet picks the new records up by tailing the same store."""
+               store, budget: int, seed: int = 0, job_type: str = "retune",
+               run_meta: Optional[Dict[str, Any]] = None, **engine_kw):
+    """Service one tuning-job request: a warm-started engine run journaled
+    into the shared ``store`` under a request-derived run id. Prior records
+    for the cell — including the ``context="prod"`` telemetry that triggered
+    the request — seed the strategy through the standard warm-start path, so
+    a drift re-tune starts from everything serving has learned. The serving
+    fleet picks the new records up by tailing the same store.
+
+    ``job_type`` prefixes the run id (``retune`` keeps the historical ids);
+    ``run_meta`` is stamped into every journaled record — the retune daemon
+    passes its claim's fencing token here (``{"fence": {"key", "token"}}``)
+    so consumers can reject a fenced-out claimant's late writes."""
     engine = ParallelTuningEngine(
         objective, budget, store=store,
-        run_id=f"retune[{request.key}]@{request.t:g}", **engine_kw)
+        run_id=f"{job_type}[{request.key}]@{request.t:g}",
+        run_meta=run_meta, **engine_kw)
     return engine.run(strategy, seed=seed)
 
 
@@ -168,7 +176,8 @@ class ParallelTuningEngine:
                  max_total_calls: Optional[int] = None,
                  checkpoint_path: Optional[str] = None,
                  store=None, run_id: Optional[str] = None,
-                 context: str = "", warm_start: bool = True):
+                 context: str = "", warm_start: bool = True,
+                 run_meta: Optional[Dict[str, Any]] = None):
         if backend not in ("thread", "process"):
             raise ValueError(f"unknown backend {backend!r}")
         self.objective = objective
@@ -189,6 +198,10 @@ class ParallelTuningEngine:
         self.run_id = run_id
         self.context = context
         self.warm_start = warm_start
+        # extra meta stamped into every journaled record alongside the
+        # strategy/seed/budget triple (e.g. the fencing token of the claim
+        # this run services — repro.store.queue)
+        self.run_meta = dict(run_meta) if run_meta else {}
         self.worker_stats: Dict[str, WorkerStats] = {}
 
     # ------------------------------------------------------------------
@@ -205,7 +218,7 @@ class ParallelTuningEngine:
                         checkpoint_path=self.checkpoint_path,
                         store=self.store, run_id=run_id, context=self.context,
                         run_meta={"strategy": strategy.name, "seed": seed,
-                                  "budget": self.budget})
+                                  "budget": self.budget, **self.run_meta})
         if resume:
             run.resume()
         rng = np.random.default_rng(seed)

@@ -1,17 +1,27 @@
-"""Retune daemon: service durable drift requests from the shared store.
+"""Tuning-fleet daemon: service durable tuning jobs from the shared store.
 
     PYTHONPATH=src python -m repro.launch.retune --store results/tune_store \
-        [--once] [--budget 40] [--strategy ei] [--poll-every 30]
+        [--once] [--budget 40] [--strategy ei] [--poll-every 30] \
+        [--worker daemon-a]
 
 The other half of the serve-side control plane (DESIGN.md §13): servers
-running ``repro.launch.serve --online`` enqueue ``kind="retune"`` control
+running ``repro.launch.serve --online`` enqueue ``kind="job"`` control
 records into the store when observed latency drifts off the stored roofline
-— this process tails the same store, claims each open request exactly once
-(``DurableRetuneQueue.claim``), and services it with a warm-started tuning
-run (``repro.core.engine.run_retune``) journaled back into the store, which
-the serving fleet then hot-reloads. Submitter, daemon, and servers share
-nothing but the store path: a request survives the death of the process
-that raised it, and a daemon crash mid-run re-arms after the claim TTL.
+— this process tails the same store, claims each open job exactly once
+under a fenced lease (``TuningJobQueue.claim``), and services it with a
+warm-started tuning run (``repro.core.engine.run_retune``) journaled back
+into the store, which the serving fleet then hot-reloads. Submitters,
+daemons, and servers share nothing but the store path: a request survives
+the death of the process that raised it, and a daemon crash mid-run re-arms
+after the claim TTL.
+
+Run as MANY of these as you like against one store — claims are
+exactly-once across the fleet (fencing tokens, ``repro.store.fence``), and
+a daemon that pauses past its TTL finds its ``done`` refused
+(``FencedClaimError``, counted in ``self.fenced``) instead of corrupting
+the job its peer re-claimed. Every journaled record of a serviced run
+carries the claim's token in ``meta["fence"]``, so hot-reload consumers
+drop a fenced-out daemon's late observations too.
 
 A cell key ``dryrun[arch×shape×mesh]`` maps back to its tuning problem by
 parsing the id the resolver minted (``repro.store.resolve.cell_objective``);
@@ -28,7 +38,8 @@ import time
 from typing import Callable, Optional
 
 from repro.core.engine import RetuneRequest, run_retune
-from repro.store.queue import DurableRetuneQueue
+from repro.store.fence import FencedClaimError
+from repro.store.queue import TuningJobQueue
 from repro.store.records import TuningRecordStore
 
 _CELL_RE = re.compile(r"^dryrun\[(?P<arch>.+?)×(?P<shape>.+?)×(?P<mesh>.+?)\]$")
@@ -106,14 +117,15 @@ def cell_objective_for(key: str):
 
 
 class RetuneDaemon:
-    """Claim-and-service loop over a store's durable retune queue."""
+    """Claim-and-service loop over a store's durable tuning-job queue —
+    one worker of a fleet of N."""
 
     def __init__(self, store_path: str, *,
                  objective_for: Callable = cell_objective_for,
                  strategy_factory: Optional[Callable] = None,
                  budget: int = 40, seed: int = 0,
                  worker: Optional[str] = None, claim_ttl: float = 3600.0,
-                 clock=time.time, verbose: bool = False):
+                 clock=time.time, verbose: bool = False, store=None):
         if strategy_factory is None:
             from repro.core.strategies import make_strategy
             strategy_factory = lambda: make_strategy("ei")  # noqa: E731
@@ -129,23 +141,31 @@ class RetuneDaemon:
         # "sealed" per pid, so a second live append segment would be at
         # risk of being folded under us. Lazy: O(hot set) open, and
         # re-snapshotted per serviced request so warm starts see the
-        # latest telemetry.
-        self.store = TuningRecordStore(store_path, lazy=True)
-        self.queue = DurableRetuneQueue(store_path, worker=worker,
-                                        claim_ttl=claim_ttl, clock=clock,
-                                        appender=self.store)
+        # latest telemetry. In-process fleet simulations pass ``store=``
+        # so every simulated daemon shares the ONE live appender the
+        # sealed-per-pid rule allows.
+        self.store = (store if store is not None
+                      else TuningRecordStore(store_path, lazy=True))
+        self.queue = TuningJobQueue(store_path, worker=worker,
+                                    claim_ttl=claim_ttl, clock=clock,
+                                    appender=self.store)
+        self.worker = self.queue.worker
         self.serviced = 0
+        #: ``done`` attempts refused because this daemon's lease was
+        #: superseded while it serviced (paused past claim_ttl)
+        self.fenced = 0
 
     def step(self):
-        """Claim and service at most one request; returns the TuneResult or
-        None when nothing was claimable."""
+        """Claim and service at most one job; returns the TuneResult, or
+        None when nothing was claimable (or our lease was fenced out
+        mid-service — the work is journaled, the job stays with the
+        claimant that superseded us)."""
         ticket = self.queue.claim()
         if ticket is None:
             return None
         if self.verbose:
-            print(f"[retune] claimed {ticket.id}: observed "
-                  f"{ticket.observed * 1e3:.1f} ms vs "
-                  f"{ticket.predicted * 1e3:.1f} ms predicted")
+            print(f"[retune] {self.worker} claimed {ticket.id} "
+                  f"({ticket.job_type}, token {ticket.token})")
         req = RetuneRequest(key=ticket.key, objective=ticket.objective,
                             observed=ticket.observed,
                             predicted=ticket.predicted,
@@ -153,12 +173,22 @@ class RetuneDaemon:
         self.store.refresh()           # warm-start from the latest records
         result = run_retune(req, self.objective_for(ticket.key),
                             self.strategy_factory(),
-                            store=self.store, budget=self.budget,
-                            seed=self.seed)
-        self.queue.done(ticket)
+                            store=self.store,
+                            budget=ticket.budget or self.budget,
+                            seed=self.seed, job_type=ticket.job_type,
+                            run_meta={"fence": {"key": ticket.key,
+                                                "token": ticket.token}})
+        try:
+            self.queue.done(ticket)
+        except FencedClaimError:
+            self.fenced += 1
+            if self.verbose:
+                print(f"[retune] {self.worker} fenced out of {ticket.id}: "
+                      "another daemon re-claimed it; done refused")
+            return None
         self.serviced += 1
         if self.verbose:
-            print(f"[retune] serviced {ticket.key}: best "
+            print(f"[retune] {self.worker} serviced {ticket.key}: best "
                   f"{result.best_value:.4g} in {result.unique_evals} "
                   "unique evals — journaled to the store")
         return result
@@ -189,12 +219,16 @@ def main() -> None:
                     help="seconds between queue polls when idle")
     ap.add_argument("--claim-ttl", type=float, default=3600.0,
                     help="seconds before an unfinished claim re-arms")
+    ap.add_argument("--worker", default=None,
+                    help="worker name in claim/done records (default: "
+                         "proc-<pid>); name each daemon of a fleet")
     args = ap.parse_args()
     from repro.core.strategies import make_strategy
     daemon = RetuneDaemon(args.store,
                           strategy_factory=lambda: make_strategy(
                               args.strategy),
                           budget=args.budget, seed=args.seed,
+                          worker=args.worker,
                           claim_ttl=args.claim_ttl, verbose=True)
     if args.once:
         n = daemon.run(max_requests=len(daemon.queue))

@@ -297,7 +297,7 @@ def main() -> None:
           f"{dt_prefill*1e3:.0f} ms, logits {server.logits_shape}")
 
     if args.online:
-        from repro.store.queue import DurableRetuneQueue
+        from repro.store.queue import TuningJobQueue
         recorder = ProdRecorder(args.store, args.arch, args.tuned_shape)
         # prefill latency is telemetry, not a decode-step observation: it
         # includes the prefill jit compile and is in different units than
@@ -307,10 +307,11 @@ def main() -> None:
                                factor=args.drift_factor,
                                stat=args.drift_stat)
         # durable: a drift request survives this server's death and is
-        # claimed by a separate `python -m repro.launch.retune` daemon.
+        # claimed (exactly once, fleet-wide) by any number of separate
+        # `python -m repro.launch.retune` daemons.
         # The queue appends through the recorder's store handle — one live
         # segment per pid, the shape compaction's "sealed" rule assumes
-        queue = DurableRetuneQueue(args.store, appender=recorder.store)
+        queue = TuningJobQueue(args.store, appender=recorder.store)
         loop = OnlineServeLoop(server, source, recorder=recorder,
                                monitor=monitor, retune_queue=queue,
                                cell_key=source.objective_id,

@@ -5,7 +5,8 @@ from one append-only record store keyed by search-space fingerprints —
 engine journals (checkpoint/resume), benchmark matrices, golden traces,
 dry-run compile tunings, and the serve-time best-config lookup. §13 adds
 the fleet-scale pieces: the sidecar segment index behind ``lazy=True``
-opens, segment compaction/GC, and the durable store-backed retune queue.
+opens, fence-locked segment compaction/GC, and the durable store-backed
+tuning-job queue (exactly-once under N racing daemons via fencing tokens).
 """
 from repro.store.records import (SpaceFingerprint, TuningRecord,
                                  TuningRecordStore)
@@ -19,8 +20,11 @@ from repro.store.watch import (DriftMonitor, HotConfigSource, OnlineServeLoop,
                                latency_summary, prod_objective)
 from repro.store.index import (StoreIndex, build_index, index_path,
                                load_index, write_index)
-from repro.store.compact import CompactionStats, compact_store
-from repro.store.queue import DurableRetuneQueue, RetuneTicket
+from repro.store.compact import (CompactionLocked, CompactionStats,
+                                 compact_store)
+from repro.store.fence import FencedClaimError, FenceRegistry
+from repro.store.queue import (JOB_TYPES, DurableRetuneQueue, JobTicket,
+                               RetuneTicket, TuningJobQueue)
 
 __all__ = ["SpaceFingerprint", "TuningRecord", "TuningRecordStore",
            "warm_matches", "ingest_golden", "is_legacy_checkpoint",
@@ -30,5 +34,7 @@ __all__ = ["SpaceFingerprint", "TuningRecord", "TuningRecordStore",
            "StoreWatcher", "HotConfigSource", "ProdRecorder", "DriftMonitor",
            "OnlineServeLoop", "ServeStats", "latency_summary",
            "StoreIndex", "build_index", "index_path", "load_index",
-           "write_index", "CompactionStats", "compact_store",
+           "write_index", "CompactionLocked", "CompactionStats",
+           "compact_store", "FencedClaimError", "FenceRegistry",
+           "JOB_TYPES", "TuningJobQueue", "JobTicket",
            "DurableRetuneQueue", "RetuneTicket"]

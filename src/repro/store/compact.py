@@ -10,11 +10,13 @@ into a single ``segment-0-<gen>.jsonl``, dropping what retention allows:
     (a later measurement of the same (fingerprint, config) exists), so
     serving writeback is bounded by the number of distinct configs served
     rather than the number of decode steps;
-  * completed re-tune control groups (``kind="retune"`` submit/claim/done
-    triples whose ``done`` landed before the window).
+  * completed tuning-job control groups (``kind="job"`` — and legacy
+    ``kind="retune"`` — submit/claim/done groups whose *accepted* ``done``
+    landed before the window; a ``done`` from a fenced-out claimant never
+    counts as completion).
 
 Everything else — tuning observations, fingerprint descriptors, open
-retune requests — survives verbatim, so resolution (``best_sharding_config``,
+job requests — survives verbatim, so resolution (``best_sharding_config``,
 ``HotConfigSource``) is identical before and after.
 
 The swap is crash-safe and watcher-safe:
@@ -40,9 +42,17 @@ compacted.
 highest-numbered segment), so it assumes at most one LIVE appender per
 process: a process holding several open appenders on one store must close
 (seal) all but its newest before compaction may run — the loop-sim's
-``seal_segment`` models exactly that. A lock-file handshake making both
-this and the one-compactor-at-a-time assumption explicit is a ROADMAP
-item.
+``seal_segment`` models exactly that.
+
+One-compactor-at-a-time is ENFORCED, not assumed: the compactor takes a
+fencing-token lock on the reserved key ``__compactor__``
+(``repro.store.fence``) before scanning, re-validates it immediately before
+the swap, and releases it when done. A second compactor raises
+``CompactionLocked`` while the lock is fresh; a compactor that died holding
+the lock is taken over once its holder stamp is older than ``lock_ttl`` —
+takeover issues the NEXT token (markers are never deleted and re-created),
+so a taken-over zombie that wakes finds its token superseded at the
+pre-swap check and aborts instead of double-swapping.
 """
 from __future__ import annotations
 
@@ -52,13 +62,44 @@ import os
 import re
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
+from repro.store.fence import FenceRegistry
 from repro.store.index import build_index, iter_complete_lines, write_index
 from repro.store.records import (_is_single_file, _segment_high_water,
                                  list_segments)
 
 _SEG_RE = re.compile(r"segment-(\d+)-(\d+)\.jsonl$")
+
+#: reserved fence key of the store-wide compaction lock
+COMPACT_LOCK_KEY = "__compactor__"
+
+
+class CompactionLocked(RuntimeError):
+    """Another compactor holds (or just took over) the compaction lock."""
+
+
+def _acquire_compact_lock(reg: FenceRegistry, t_now: float,
+                          lock_ttl: float) -> int:
+    """Take the compaction lock or raise ``CompactionLocked``. A live lock
+    is one whose token is unreleased and whose holder stamp is younger than
+    ``lock_ttl``; anything else is stale and taken over by issuing the next
+    token (never by deleting the old marker — the unlink/recreate race
+    would let a second taker remove a FRESH lock)."""
+    cur = reg.highest(COMPACT_LOCK_KEY)
+    if cur and not reg.released(COMPACT_LOCK_KEY, cur):
+        holder = reg.holder(COMPACT_LOCK_KEY, cur) or {}
+        age = t_now - float(holder.get("t", -math.inf))
+        if age <= lock_ttl:
+            raise CompactionLocked(
+                f"compaction lock (token {cur}) held by "
+                f"{holder.get('by', '?')!r}, {age:.0f}s old "
+                f"(lock_ttl={lock_ttl:g}s)")
+    token = reg.issue(COMPACT_LOCK_KEY, floor=cur,
+                      by=f"compactor-{os.getpid()}")
+    if token is None:
+        raise CompactionLocked("lost the compaction-lock takeover race")
+    return token
 
 
 @dataclass
@@ -86,14 +127,27 @@ def _parse_seg(name: str) -> Optional[Tuple[int, int]]:
 
 def compact_store(path: str, *, retention_s: float = math.inf,
                   now: Optional[float] = None,
-                  clock=time.time) -> CompactionStats:
+                  clock=time.time, lock_ttl: float = 3600.0
+                  ) -> CompactionStats:
     """Fold the sealed segments of a directory store. ``retention_s`` bounds
     the GC window (default: keep everything — pure folding); ``now`` pins
-    the window edge for deterministic tests. One compactor at a time."""
+    the window edge for deterministic tests. One compactor at a time,
+    enforced: raises ``CompactionLocked`` while another holds the lock
+    (stale holders — older than ``lock_ttl`` — are taken over)."""
     if _is_single_file(path):
         raise ValueError("compaction requires a directory store "
                          "(a single-file journal is one live segment)")
     t_now = clock() if now is None else float(now)
+    reg = FenceRegistry(path, clock=lambda: t_now)
+    lock = _acquire_compact_lock(reg, t_now, float(lock_ttl))
+    try:
+        return _compact_locked(path, retention_s, t_now, reg, lock)
+    finally:
+        reg.release(COMPACT_LOCK_KEY, lock)
+
+
+def _compact_locked(path: str, retention_s: float, t_now: float,
+                    reg: FenceRegistry, lock: int) -> CompactionStats:
     stats = CompactionStats()
     segs = [(seg, _parse_seg(os.path.basename(seg)))
             for seg in list_segments(path, False)]
@@ -139,16 +193,46 @@ def compact_store(path: str, *, retention_s: float = math.inf,
     # exists among the folded sources (idx None — configless telemetry —
     # supersedes per fingerprint, bounding defaults journaling too)
     last_at: Dict[Tuple[str, Optional[int]], int] = {}
-    retune_done_t: Dict[str, float] = {}
+    # job/retune groups are replayed with the queue's own fencing fold: a
+    # ``done`` only closes its id if its token is not below the group's
+    # highest UNRELEASED claim token at that point — a fenced-out
+    # claimant's late ``done`` must not let GC fold away a job another
+    # daemon is servicing, while a racer that backed off (claim + release)
+    # must not fence the winner it deferred to
+    job_done_t: Dict[str, float] = {}
+    open_ids: Dict[str, Set[str]] = {}       # key -> open submit ids
+    group_claims: Dict[str, Set[int]] = {}   # key -> unreleased claim tokens
     for i, (_, _, d) in enumerate(entries):
-        if d.get("kind") == "obs" and d.get("fp") in prod_digests:
+        kind = d.get("kind")
+        if kind == "obs" and d.get("fp") in prod_digests:
             last_at[(d["fp"], d.get("idx"))] = i
-        elif d.get("kind") == "retune" and d.get("state") == "done":
-            rid = d.get("id", "")
-            retune_done_t[rid] = max(retune_done_t.get(rid, 0.0),
-                                     float(d.get("t", 0.0)))
-    dead_retunes = {rid for rid, t in retune_done_t.items()
-                    if t < t_now - retention_s}
+            continue
+        if kind not in ("retune", "job"):
+            continue
+        state, rid = d.get("state"), str(d.get("id", ""))
+        key = str(d.get("key", ""))
+        if state == "submit":
+            open_ids.setdefault(key, set()).add(rid)
+        elif state == "claim":
+            if rid in open_ids.get(key, ()):
+                group_claims.setdefault(key, set()).add(
+                    int(d.get("token") or 0))
+        elif state == "release":
+            group_claims.get(key, set()).discard(int(d.get("token") or 0))
+        elif state == "done":
+            token = d.get("token")
+            if token is not None \
+                    and int(token) < max(group_claims.get(key, ()),
+                                         default=0):
+                continue                     # fenced: does not close the job
+            if rid in open_ids.get(key, ()):
+                open_ids[key].discard(rid)
+                if not open_ids[key]:
+                    group_claims.pop(key, None)  # group closed: fresh fences
+            job_done_t[rid] = max(job_done_t.get(rid, 0.0),
+                                  float(d.get("t", 0.0)))
+    dead_jobs = {rid for rid, t in job_done_t.items()
+                 if t < t_now - retention_s}
     kept: List[Tuple[str, int, dict]] = []
     for i, (src, offset, d) in enumerate(entries):
         kind = d.get("kind")
@@ -157,7 +241,7 @@ def compact_store(path: str, *, retention_s: float = math.inf,
                 and float(d.get("t", 0.0)) < t_now - retention_s:
             stats.dropped_prod += 1
             continue
-        if kind == "retune" and d.get("id", "") in dead_retunes:
+        if kind in ("retune", "job") and d.get("id", "") in dead_jobs:
             stats.dropped_retune += 1
             continue
         kept.append((src, offset, d))
@@ -175,7 +259,7 @@ def compact_store(path: str, *, retention_s: float = math.inf,
     with open(tmp, "w") as f:
         f.write(json.dumps({
             "kind": "compact", "v": 1, "gen": gen, "t": t_now,
-            "sources": stats.sources,
+            "lock": lock, "sources": stats.sources,
             "high_water": {str(p): hk for p, hk in
                            sorted(merged_hw.items())}}) + "\n")
         for digest in sorted(fps):
@@ -191,6 +275,15 @@ def compact_store(path: str, *, retention_s: float = math.inf,
             f.write(json.dumps(d) + "\n")
         f.flush()
         os.fsync(f.fileno())
+    # pre-swap revalidation: if a peer judged us stale and took the lock
+    # over while we scanned, OUR view of the sources is the stale one —
+    # abort rather than race the new holder's swap
+    if reg.highest(COMPACT_LOCK_KEY) != lock \
+            or reg.released(COMPACT_LOCK_KEY, lock):
+        os.unlink(tmp)
+        raise CompactionLocked(
+            f"compaction lock token {lock} superseded mid-compaction "
+            "(this compactor was presumed dead and taken over)")
     os.replace(tmp, out_path)          # the swap: compacted data is visible
     for seg in sources:                # only now may the sources disappear
         os.unlink(seg)

@@ -37,8 +37,9 @@ from repro.store.records import (SpaceFingerprint, _is_single_file,
 INDEX_VERSION = 1
 
 #: record kinds that carry no observations: compaction headers and durable
-#: control records (the retune queue) — cataloged separately or skipped
-CONTROL_KINDS = ("compact", "retune")
+#: control records (the tuning-job queue; ``retune`` is its legacy
+#: single-daemon spelling) — cataloged separately or skipped
+CONTROL_KINDS = ("compact", "retune", "job")
 
 
 def index_path(store_path: str) -> str:
@@ -191,8 +192,8 @@ def scan_segment(seg: str, idx: StoreIndex, start: int = 0) -> int:
             idx.total += 1
         elif kind == "compact":
             builder.flush()                 # header: no extent
-        elif kind == "retune":
-            builder.add(("ctl", "retune"), offset, nbytes, is_obs=True)
+        elif kind in ("retune", "job"):
+            builder.add(("ctl", kind), offset, nbytes, is_obs=True)
         else:
             raise ValueError(
                 f"{seg}:@{offset}: unknown record kind {kind!r} — if this "

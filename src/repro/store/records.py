@@ -22,8 +22,10 @@ per digest per segment, making segments self-contained) or an observation
 (``kind: obs``). Appends are flushed per record, so a killed run leaves a
 valid record-stream prefix; a torn final line is tolerated on load. Two
 further kinds are control plane, not observations: ``kind: compact``
-(compaction headers, ``repro.store.compact``) and ``kind: retune`` (the
-durable re-tune queue, ``repro.store.queue``) — the loader skips both.
+(compaction headers, ``repro.store.compact``) and ``kind: job`` /
+``kind: retune`` (the durable tuning-job queue, ``repro.store.queue``;
+``retune`` is the queue's legacy single-daemon spelling) — the loader
+skips all of them.
 
 Open modes:
   * ``load=True`` (default) — parse every segment into memory; right for
@@ -298,8 +300,8 @@ class TuningRecordStore:
             rec = TuningRecord.from_json(d)
             self._by_fp.setdefault(rec.fp, []).append(len(self._records))
             self._records.append(rec)
-        elif kind in ("compact", "retune"):
-            pass    # control plane: compaction headers / durable queue
+        elif kind in ("compact", "retune", "job"):
+            pass    # control plane: compaction headers / durable job queue
         else:
             raise ValueError(
                 f"{seg}:{lineno + 1}: unknown record kind {kind!r} — if this "

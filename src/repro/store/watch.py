@@ -16,8 +16,9 @@ loop at serve time:
     existing ``repro.store.transfer.warm_matches`` cross-fingerprint path;
   * ``DriftMonitor`` flags when observed prod latency diverges from the
     stored roofline prediction by a configurable factor, and
-    ``OnlineServeLoop`` turns that into a ``RetuneRequest`` on the engine's
-    intake queue (repro.core.engine.RetuneQueue).
+    ``OnlineServeLoop`` turns that into a ``RetuneRequest`` on the intake
+    queue (the in-process ``repro.core.engine.RetuneQueue`` or the durable
+    fleet-wide ``repro.store.queue.TuningJobQueue``).
 
 Everything here is control plane: no jax, no threads, no wall-clock sleeps.
 Time enters only through an injectable ``clock`` and latencies measured by
@@ -81,9 +82,9 @@ class StoreWatcher:
     of every prior incarnation — so a rewrite-and-swap mid-tail re-delivers
     nothing and loses nothing.
 
-    ``collect_controls=True`` additionally retains ``kind="retune"`` control
-    records for ``drain_controls()`` (the durable queue's read path);
-    otherwise they are skipped.
+    ``collect_controls=True`` additionally retains ``kind="job"`` /
+    ``kind="retune"`` control records for ``drain_controls()`` (the durable
+    job queue's read path); otherwise they are skipped.
 
     ``start_offsets`` (basename -> byte offset) seeds per-segment read
     positions: a caller that already consumed a segment's prefix through a
@@ -230,7 +231,7 @@ class StoreWatcher:
                 elif kind == "compact":
                     for name in d.get("sources", ()):
                         self._retire(name)
-                elif kind == "retune":
+                elif kind in ("retune", "job"):
                     src = d.get("src")
                     if self.collect_controls and (
                             src is None
@@ -263,7 +264,15 @@ class HotConfigSource:
             space = sharding_space(arch, shape, wide=wide)
         self.objective_id = objective_id or cell_objective(arch, shape, mesh)
         self.fp = SpaceFingerprint.of(space, objective=self.objective_id)
-        self.watcher = StoreWatcher(path, from_start=True)
+        # controls are collected too: job-claim records carry the fencing
+        # tokens observation fencing is judged against (see _fold)
+        self.watcher = StoreWatcher(path, from_start=True,
+                                    collect_controls=True)
+        #: highest job-claim fencing token seen per key: an observation
+        #: journaled under a LOWER token is a fenced-out (superseded)
+        #: claimant's late write and must not steer the hot path
+        self._fence_top: Dict[str, int] = {}
+        self.fenced_obs_rejected = 0
         #: swap hysteresis (seconds of roofline step time): a same-tier
         #: improvement must beat the deployed value by MORE than this to be
         #: worth the re-jit a swap costs. 0.0 = historical always-swap.
@@ -293,6 +302,14 @@ class HotConfigSource:
         return self._best_exact is None
 
     def _fold(self, rec: TuningRecord) -> None:
+        fence = (rec.meta or {}).get("fence")
+        if fence and int(fence.get("token") or 0) < \
+                self._fence_top.get(str(fence.get("key", "")), 0):
+            # the key's lease moved past this record's token: the writer
+            # was fenced out mid-service; the new claimant's run re-journals
+            # the cell under the current token
+            self.fenced_obs_rejected += 1
+            return
         if rec.config is None or not math.isfinite(rec.value):
             return
         if rec.fp == self.fp.digest:
@@ -315,7 +332,16 @@ class HotConfigSource:
         never pays back the re-jit. A tier upgrade always swaps (it is what
         a restarting server would deploy; the fleet must converge on it).
         Returns None when nothing should change."""
-        for rec in self.watcher.poll():
+        recs = self.watcher.poll()
+        # fold this batch's claim tokens FIRST: a fenced-out claimant's
+        # late observations sort after the superseding claim in append
+        # order, so token state must lead the observation fold
+        for d in self.watcher.drain_controls():
+            if d.get("state") == "claim":
+                key, tok = str(d.get("key", "")), int(d.get("token") or 0)
+                if tok > self._fence_top.get(key, 0):
+                    self._fence_top[key] = tok
+        for rec in recs:
             self._fold(rec)
         if self._best_exact is not None:
             cand, tier = self._best_exact, 0

@@ -15,12 +15,17 @@ This file is the template for end-to-end loop tests: build a ``LoopSim`` on
 a tmp store, script appends/serves/drift, assert on ``ServeStats`` and on
 the store contents. No sleeps, no subprocesses, no jax. §13 extensions:
 ``durable_queue=True`` routes drift requests through the store-backed
-``DurableRetuneQueue`` (serviced by ``repro.launch.retune.RetuneDaemon``),
+``TuningJobQueue`` (serviced by ``repro.launch.retune.RetuneDaemon``),
 ``swap_margin`` exercises hot-reload hysteresis, and
 ``seal_segment``/``compact`` script segment rollover and compaction
-mid-serve.
+mid-serve. ``FleetSim`` scales the daemon side out: N REAL ``RetuneDaemon``
+instances race over one store's job queue (with an optionally racing
+compactor) under the virtual clock, for the exactly-once/fencing
+acceptance scenarios of DESIGN.md §13.
 """
 from __future__ import annotations
+
+import json
 
 import numpy as np
 
@@ -289,3 +294,138 @@ def evals_to_reach(trace: np.ndarray, value: float):
     (same metric as benchmarks/warm_start.py)."""
     hit = np.flatnonzero(np.asarray(trace) <= value + 1e-12)
     return int(hit[0]) + 1 if hit.size else None
+
+
+class FleetSim:
+    """N racing tuning daemons (+ an optionally racing compactor) over ONE
+    on-disk store, in-process and deterministic.
+
+    The control plane is the real one — ``TuningJobQueue`` claims under
+    real fencing tokens, ``RetuneDaemon.step`` services through
+    ``run_retune`` with real journaled engine runs, ``compact_store`` takes
+    the real compactor lock — only time (``VirtualClock``) and the tuning
+    objective (a tiny ``SimulatedObjective`` cell per job key) are
+    simulated. All daemons share one live appender ``TuningRecordStore``:
+    in-process they share a pid, and compaction's "sealed" rule allows one
+    live append segment per pid.
+
+    ``service_log`` records every (key, daemon) service that actually ran,
+    which is the exactly-once ledger the acceptance tests assert on."""
+
+    def __init__(self, store_path: str, *, n_daemons: int = 3,
+                 claim_ttl: float = 1000.0, budget: int = 3,
+                 strategy: str = "random", seed: int = 0):
+        from repro.core.searchspace import Param, SearchSpace
+        from repro.core.strategies import make_strategy
+        from repro.launch.retune import RetuneDaemon
+        from repro.store.queue import TuningJobQueue
+        self.clock = VirtualClock(t0=1.0)   # t=0 reads as "unset" in submit
+        self.claim_ttl = float(claim_ttl)
+        self.space = SearchSpace([Param("a", (0, 1, 2, 3)),
+                                  Param("b", (0, 1, 2))], name="fleet-cell")
+        self.times = cell_surface(self.space, seed=11)
+        self.store_path = store_path
+        # the ONE live appender every in-process component writes through
+        self.store = TuningRecordStore(store_path, lazy=True)
+        self.submitter = TuningJobQueue(store_path, worker="submitter",
+                                        claim_ttl=self.claim_ttl,
+                                        clock=self.clock,
+                                        appender=self.store)
+        self.service_log: list = []          # (key, daemon worker name)
+        self.daemons = [
+            RetuneDaemon(store_path,
+                         objective_for=self._objective_for_daemon(
+                             f"daemon-{i}"),
+                         strategy_factory=lambda s=strategy: make_strategy(s),
+                         budget=budget, seed=seed, worker=f"daemon-{i}",
+                         claim_ttl=self.claim_ttl, clock=self.clock,
+                         store=self.store)
+            for i in range(int(n_daemons))]
+        self.submitted: list = []            # keys, in submit order
+        self.compactions = 0                 # swaps that ran to completion
+        self.compactions_locked = 0          # attempts the lock refused
+
+    def _objective_for_daemon(self, worker: str):
+        def objective_for(key: str):
+            self.service_log.append((key, worker))
+            return SimulatedObjective(self.space, self.times, name=key)
+        return objective_for
+
+    # -- producer side ------------------------------------------------------
+    def submit_jobs(self, n: int, *, job_types=None) -> None:
+        """Enqueue ``n`` jobs with distinct keys, cycling the job types
+        (all four by default)."""
+        from repro.core.engine import RetuneRequest
+        from repro.store.queue import JOB_TYPES
+        job_types = list(job_types or JOB_TYPES)
+        for i in range(int(n)):
+            key = f"cell-{len(self.submitted):03d}"
+            self.clock.advance(0.01)         # distinct submit timestamps
+            accepted = self.submitter.submit(
+                RetuneRequest(key=key, objective=key, reason="scripted",
+                              t=self.clock()),
+                job_type=job_types[i % len(job_types)])
+            assert accepted, f"fresh key {key} must enqueue"
+            self.submitted.append(key)
+
+    # -- consumer side ------------------------------------------------------
+    def step_daemon(self, i: int):
+        """One claim-and-service step of daemon ``i`` (advances the sim
+        clock by one tick)."""
+        result = self.daemons[i].step()
+        self.clock.advance(1.0)
+        return result
+
+    def drain(self, *, compact_every: int = 0,
+              retention_s: float = float("inf"),
+              max_rounds: int = 200) -> int:
+        """Round-robin the daemons until the queue is empty, optionally
+        racing a compaction every ``compact_every`` rounds. Returns the
+        number of rounds taken."""
+        rounds = 0
+        while len(self.submitter) > 0 and rounds < max_rounds:
+            rounds += 1
+            for i in range(len(self.daemons)):
+                self.step_daemon(i)
+            if compact_every and rounds % compact_every == 0:
+                self.compact_racing(retention_s=retention_s)
+        return rounds
+
+    def compact_racing(self, retention_s: float = float("inf")):
+        """Seal the shared appender's segment and compact under the real
+        lock; a refused lock counts instead of raising (a racing fleet
+        treats ``CompactionLocked`` as 'someone else is on it')."""
+        from repro.store.compact import CompactionLocked, compact_store
+        self.store.close()                   # seal: next append rolls over
+        try:
+            stats = compact_store(self.store_path, retention_s=retention_s,
+                                  clock=self.clock)
+        except CompactionLocked:
+            self.compactions_locked += 1
+            return None
+        self.compactions += int(stats.folded)
+        return stats
+
+    # -- audits -------------------------------------------------------------
+    def open_keys(self) -> list:
+        return [tk.key for tk in self.submitter.open_tickets()]
+
+    def services_per_key(self) -> dict:
+        out: dict = {}
+        for key, _ in self.service_log:
+            out[key] = out.get(key, 0) + 1
+        return out
+
+    def resolution_view(self) -> bytes:
+        """Canonical bytes of the store's OBSERVATION content (what
+        resolution folds): every record's identity fields, sorted. Stable
+        across compaction iff compaction preserved resolution — provenance
+        chains (``src``) and on-disk layout are excluded by construction."""
+        store = TuningRecordStore(self.store_path)
+        rows = sorted(
+            json.dumps({"fp": r.fp, "run": r.run, "seq": r.seq,
+                        "key": r.key, "idx": r.idx, "value": r.value,
+                        "config": r.config, "t": r.t},
+                       sort_keys=True, default=str)
+            for r in store.records())
+        return ("\n".join(rows)).encode("utf-8")

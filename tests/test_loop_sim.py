@@ -19,12 +19,13 @@ import math
 import numpy as np
 import pytest
 
-from loop_sim import (LoopSim, StubDecodeServer, VirtualClock,
+from loop_sim import (FleetSim, LoopSim, StubDecodeServer, VirtualClock,
                       evals_to_reach, prod_only_store)
 from repro.core.engine import RetuneQueue, RetuneRequest, run_retune
 from repro.core.runner import run_strategy
 from repro.core.strategies import make_strategy
-from repro.store import TuningRecord, TuningRecordStore, warm_matches
+from repro.store import (JOB_TYPES, FencedClaimError, TuningRecord,
+                         TuningRecordStore, warm_matches)
 
 TARGET_REDUCTION = 0.30          # same bar as results/bench/warm_start.json
 
@@ -542,3 +543,78 @@ def test_flash_and_decode_cells_coexist_independently(tmp_path):
     assert len(stats.kernel_swaps) == 1
     assert not sim.decode_kernel_source.stale
     assert "num_splits" in sim.server.kernel_config
+
+
+# ---------------------------------------------------------------------------
+# the tuning fleet (ISSUE 9 acceptance): N daemons + a racing compactor
+# ---------------------------------------------------------------------------
+def test_fleet_drains_50_mixed_jobs_exactly_once_with_racing_compactor(
+        tmp_path):
+    """The ISSUE 9 acceptance scenario end to end: 3 daemons round-robin a
+    50-job queue cycling all four job types while a compactor races them
+    every few rounds under the real lock. Every job is serviced exactly
+    once across the fleet, every daemon participates, every serviced run is
+    journaled under its job type, and the store's resolution content is
+    byte-identical across a final compaction."""
+    sim = FleetSim(str(tmp_path / "store"), n_daemons=3, budget=2)
+    sim.submit_jobs(50)
+    assert len(sim.submitter) == 50
+    rounds = sim.drain(compact_every=3, retention_s=0.0)
+    assert sim.open_keys() == [], f"queue not drained after {rounds} rounds"
+
+    per_key = sim.services_per_key()
+    assert sorted(per_key) == sorted(sim.submitted), \
+        "every submitted job serviced, no phantom keys"
+    assert set(per_key.values()) == {1}, \
+        f"duplicate service: {[k for k, n in per_key.items() if n != 1]}"
+    assert {w for _, w in sim.service_log} == \
+        {f"daemon-{i}" for i in range(3)}, "every daemon participated"
+    assert all(d.fenced == 0 for d in sim.daemons), \
+        "no daemon was fenced out in an uncontended round-robin"
+    assert sim.compactions >= 1, "the compactor never actually raced"
+
+    store = TuningRecordStore(sim.store_path)
+    prefixes = {run.split("[")[0] for run in store.runs() if "[" in run}
+    assert set(JOB_TYPES) <= prefixes, \
+        f"missing job-type runs: {set(JOB_TYPES) - prefixes}"
+    # every journaled service carries its claim's fencing token
+    fenced_meta = [r for r in store.records()
+                   if (r.meta or {}).get("fence", {}).get("token", 0) >= 1]
+    assert fenced_meta, "serviced runs must stamp meta['fence']"
+
+    before = sim.resolution_view()
+    assert sim.compact_racing(retention_s=0.0) is not None
+    assert sim.resolution_view() == before, \
+        "compaction changed the store's resolution content"
+
+
+def test_fleet_fenced_out_claimant_wakes_and_is_refused(tmp_path):
+    """A daemon claims, stalls past the claim TTL mid-service, a peer
+    re-claims (higher fencing token) and services the job — when the
+    stalled daemon revives, its ``done`` raises ``FencedClaimError`` and
+    the job is NOT double-closed or double-counted."""
+    sim = FleetSim(str(tmp_path / "store"), n_daemons=2, claim_ttl=5.0,
+                   budget=2)
+    sim.submit_jobs(1)
+    zombie = sim.daemons[0].queue.claim()
+    assert zombie is not None and zombie.token == 1
+    # daemon-1 folds the claim now: its TTL countdown starts on ITS clock
+    assert sim.daemons[1].queue.claim() is None
+    sim.clock.advance(6.0)               # daemon-0 stalls past the TTL
+    takeover = sim.daemons[1].queue.claim()
+    assert takeover is not None and takeover.token == 2, \
+        "the expired lease re-arms for the peer under a higher token"
+    with pytest.raises(FencedClaimError):
+        sim.daemons[0].queue.done(zombie)    # revives mid-takeover: refused
+    assert sim.open_keys() == ["cell-000"], \
+        "the zombie's refused done must not close the re-claimed job"
+    # the peer hands its lease back (shutdown) and services via the real
+    # daemon step instead — claim token 3, run, done
+    sim.daemons[1].queue.release(takeover)
+    assert sim.step_daemon(1) is not None
+    assert sim.open_keys() == []             # serviced once, closed once
+    assert sim.services_per_key() == {"cell-000": 1}
+    # after closure the zombie's done is an idempotent no-op — it neither
+    # raises nor re-closes a later generation of the key
+    sim.daemons[0].queue.done(zombie)
+    assert sim.services_per_key() == {"cell-000": 1}

@@ -1,28 +1,38 @@
 """Concurrent store access: a tail-following reader vs a per-record-flushing
-writer — now with compaction rewriting segments underneath both.
+writer — now with compaction rewriting segments underneath both, and a
+FLEET of daemons racing over the fenced tuning-job queue (ISSUE 9).
 
-The contract under test (ISSUE 4 satellite, extended by ISSUE 5): however
-polls interleave with appends, ``StoreWatcher`` delivers every record
-EXACTLY ONCE, IN WRITE ORDER — including when the reader observes a torn
-(partially written) final line, across a segment rollover (writer close +
-reopen), and across a ``compact_store`` rewrite-and-swap that folds sealed
-segments mid-tail. The sidecar index must survive the same traffic: a
-stale index (segments rewritten under it) rebuilds, a torn index write is
-treated as missing, and appends past the indexed frontier are picked up by
-the tail scan. The deterministic cases pin the edges; the hypothesis
-property drives randomized interleavings of {write, poll, rollover,
-compact}.
+The contracts under test:
+
+  * (ISSUE 4/5) however polls interleave with appends, ``StoreWatcher``
+    delivers every record EXACTLY ONCE, IN WRITE ORDER — across torn final
+    lines, segment rollover, and ``compact_store`` rewrite-and-swaps; the
+    sidecar index survives the same traffic;
+  * (ISSUE 9) however N daemons' {submit, claim, service, die, compact}
+    schedules interleave, ``TuningJobQueue`` grants each job's lease to at
+    most one live claimant at a time (fencing tokens), a superseded
+    claimant's ``done`` is refused at the API (``FencedClaimError``) AND at
+    the fold, lease expiry is judged on each reader's own clock (immune to
+    cross-machine skew in the writer stamps), and the compactor lock admits
+    one compactor at a time.
+
+The deterministic cases pin the edges; the hypothesis properties drive
+randomized interleavings, plus a 600-schedule seeded sweep of the fleet
+property (the ISSUE 9 bar).
 """
 import json
 import os
+import random
 import tempfile
 
 import pytest
 
 from repro.core.searchspace import Param, SearchSpace
-from repro.store import (SpaceFingerprint, StoreWatcher, TuningRecord,
-                         TuningRecordStore, compact_store, index_path,
-                         load_index)
+from repro.store import (JOB_TYPES, CompactionLocked, FencedClaimError,
+                         FenceRegistry, SpaceFingerprint, StoreWatcher,
+                         TuningJobQueue, TuningRecord, TuningRecordStore,
+                         compact_store, index_path, load_index)
+from repro.store.compact import COMPACT_LOCK_KEY
 
 SPACE = SearchSpace([Param("a", (0, 1, 2, 3)), Param("b", (0, 1, 2))],
                     name="cc")
@@ -298,6 +308,164 @@ def test_outdated_index_tail_scan_picks_up_appends(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# fenced tuning-job queue under a fleet of daemons (ISSUE 9)
+# ---------------------------------------------------------------------------
+class _Req:
+    """Anything with the RetuneRequest fields is submittable."""
+
+    def __init__(self, key: str, t: float = 1.0):
+        self.key = key
+        self.objective = f"{key}@sim"
+        self.observed = 2.0
+        self.predicted = 1.0
+        self.reason = "drift"
+        self.t = t
+
+
+def _queue(path, worker, clock, appender, ttl=10.0):
+    return TuningJobQueue(path, worker=worker, claim_ttl=ttl, clock=clock,
+                          appender=appender)
+
+
+@pytest.mark.parametrize("skew", [-1e6, 1e6])
+def test_lease_expiry_judged_on_reader_clock_not_writer_stamps(tmp_path,
+                                                               skew):
+    """Cross-machine clock skew: the claimant's host clock is ±11 days off.
+    Under writer-stamp arbitration a -skew claim would look ancient (peers
+    steal the live lease instantly) and a +skew claim far-future (the queue
+    wedges for 11 days). Reader-clock expiry makes both irrelevant: each
+    reader counts the TTL from when IT first folded the claim."""
+    path = str(tmp_path / "store")
+    t = [100.0]
+    store = TuningRecordStore(path, load=False)
+    a = _queue(path, "a", lambda: t[0] + skew, store)   # skewed claimant
+    b = _queue(path, "b", lambda: t[0], store)          # honest reader
+    assert a.submit(_Req("cell-k", t=1.0))
+    ticket = a.claim()
+    assert ticket is not None and ticket.token == 1
+    assert b.claim() is None, \
+        "live lease must hold regardless of the writer's clock"
+    t[0] += 5.0
+    assert b.claim() is None, "still inside the TTL on b's own clock"
+    t[0] += 6.0                     # 11s since b first folded the claim
+    took = b.claim()
+    assert took is not None and took.token == 2, \
+        "a genuinely expired lease re-arms with a higher fencing token"
+    b.done(took)
+    assert len(_queue(path, "c", lambda: t[0], store)) == 0
+
+
+def test_zombie_done_raises_and_fold_rejects_the_record(tmp_path):
+    """The tentpole bug: a claimant pauses past its TTL, a peer re-claims
+    and services, then the zombie wakes. Its ``done()`` must raise
+    ``FencedClaimError`` — and even a done RECORD that slipped onto disk
+    (zombie died between the fence check and the flush landing) must be
+    refused by every fold, so the job is not closed under the live
+    claimant."""
+    path = str(tmp_path / "store")
+    t = [100.0]
+    clk = lambda: t[0]                                       # noqa: E731
+    store = TuningRecordStore(path, load=False)
+    a = _queue(path, "a", clk, store)
+    b = _queue(path, "b", clk, store)
+    assert a.submit(_Req("cell-k", t=1.0))
+    za = a.claim()
+    assert za is not None and za.token == 1
+    assert b.claim() is None        # b folds the claim: its TTL clock starts
+    t[0] += 11.0                    # a pauses past claim_ttl
+    zb = b.claim()
+    assert zb is not None and zb.token == 2, "expired lease re-claimed"
+    with pytest.raises(FencedClaimError):
+        a.done(za)                  # the zombie wakes mid-service
+    # the slipped-write variant: force the zombie's done onto disk anyway
+    store.append_control({"kind": "job", "state": "done", "id": za.id,
+                          "key": za.key, "by": "a", "t": clk(),
+                          "token": za.token})
+    fresh = _queue(path, "c", clk, store)
+    assert len(fresh) == 1, "the fenced done must not close the job"
+    assert fresh.rejected_writes == 1
+    b.done(zb)                      # the live claimant closes it
+    assert len(_queue(path, "d", clk, store)) == 0
+
+
+def test_racing_claimant_with_stale_snapshot_backs_off(tmp_path):
+    """The claim-race window: b folded the queue BEFORE a's claim landed,
+    so b's pre-append token snapshot misses it. b's post-append re-read
+    must spot the unseen live lower-token claim, release its own token,
+    and back off — and the loser's released token must NOT fence the
+    winner's ``done`` (released claims are transparent to arbitration)."""
+    path = str(tmp_path / "store")
+    t = [100.0]
+    clk = lambda: t[0]                                       # noqa: E731
+    store = TuningRecordStore(path, load=False)
+    a = _queue(path, "a", clk, store)
+    b = _queue(path, "b", clk, store)
+    assert a.submit(_Req("cell-k", t=1.0))
+    b._refresh()                    # b's snapshot predates a's claim
+    canon = b._canonical("cell-k")
+    ta = a.claim()
+    assert ta is not None and ta.token == 1
+    assert b._try_claim(canon, clk()) is None, \
+        "the post-append check must detect the stolen claim and back off"
+    assert b.claim() is None, "a still holds the live lease"
+    a.done(ta)                      # the winner's done is NOT fenced by the
+    assert a.rejected_writes == 0   # loser's released higher token
+    assert len(_queue(path, "c", clk, store)) == 0
+
+
+def test_released_racer_token_survives_compaction_fold(tmp_path):
+    """compact_store's GC replays the same fencing fold: a claim+release
+    pair (an aborted racer) must be transparent there too, or compaction
+    would resurrect a job whose winner's done it mis-judged as fenced."""
+    path = str(tmp_path / "store")
+    t = [100.0]
+    clk = lambda: t[0]                                       # noqa: E731
+    store = TuningRecordStore(path, load=False)
+    a = _queue(path, "a", clk, store)
+    b = _queue(path, "b", clk, store)
+    assert a.submit(_Req("cell-k", t=1.0))
+    b._refresh()
+    canon = b._canonical("cell-k")
+    ta = a.claim()
+    assert b._try_claim(canon, clk()) is None   # release(token 2) on disk
+    a.done(ta)                                  # done carries token 1
+    store.close()
+    store2 = TuningRecordStore(path, load=False)
+    store2.append(_rec(0), fingerprint=FP)      # seals the control segment
+    stats = compact_store(path, retention_s=0.0, now=t[0] + 1.0)
+    assert stats.folded and stats.dropped_retune > 0, \
+        "the completed group must GC despite the released racer token"
+    assert len(_queue(path, "c", clk, store2)) == 0
+    store2.close()
+
+
+def test_second_compactor_raises_while_lock_is_fresh(tmp_path):
+    path = str(tmp_path / "store")
+    store = TuningRecordStore(path)
+    store.append(_rec(0), fingerprint=FP)
+    store.close()
+    store = TuningRecordStore(path)
+    store.append(_rec(1), fingerprint=FP)       # seals segment 0
+    reg = FenceRegistry(path, clock=lambda: 100.0)
+    held = reg.issue(COMPACT_LOCK_KEY, by="compactor-peer")
+    assert held == 1
+    with pytest.raises(CompactionLocked):
+        compact_store(path, now=100.5)          # peer's lock is fresh
+    # a lock whose holder stamp aged past lock_ttl is taken over — with the
+    # NEXT token, never by deleting the marker
+    stats = compact_store(path, now=100.0 + 3600.0 + 1.0)
+    assert stats.folded
+    assert reg.highest(COMPACT_LOCK_KEY) == 2
+    assert reg.released(COMPACT_LOCK_KEY, 2), "lock released after the swap"
+    # an explicitly released lock is claimable immediately, no TTL wait
+    store.close()
+    store = TuningRecordStore(path)
+    store.append(_rec(2), fingerprint=FP)
+    assert compact_store(path, now=100.0 + 3600.0 + 2.0).folded
+    store.close()
+
+
+# ---------------------------------------------------------------------------
 # randomized interleavings (hypothesis) — guarded import, NOT importorskip:
 # the deterministic edge-case tests above must run even without hypothesis
 # ---------------------------------------------------------------------------
@@ -378,3 +546,197 @@ else:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_any_schedule_with_compaction_is_exactly_once_in_order():
         pass
+
+
+# ---------------------------------------------------------------------------
+# fleet schedules: {submit, claim, service, die, compact, tick} × N daemons
+# (ISSUE 9 acceptance property) — the harness executes any op schedule and
+# checks the lease-exclusivity invariants against a model ledger after every
+# single step, then drains the queue and reconciles a cold fold.
+# ---------------------------------------------------------------------------
+class _FleetFuzz:
+    """N in-process daemons sharing ONE appender store (one pid = one live
+    segment, the sealed-per-pid rule) racing over a handful of job keys.
+
+    Invariants checked:
+      * a claim is granted only when no other claim on the key is live on
+        the shared clock (exactly-once leases);
+      * fencing tokens per key are strictly increasing;
+      * an accepted ``done`` comes from the ledger's current owner (or is
+        a benign no-op on an already-closed group);
+      * a superseded claimant's ``done`` raises ``FencedClaimError``;
+      * after draining, every accepted generation of every key was
+        serviced exactly once, and a cold fold agrees the queue is empty.
+    """
+
+    KEYS = ("cell-a", "cell-b", "cell-c")
+    TTL = 10.0
+
+    def __init__(self, path: str, n_daemons: int = 3):
+        self.path = path
+        self.t = [100.0]
+        self.clock = lambda: self.t[0]
+        self.store = TuningRecordStore(path, load=False)
+        self.daemons = [_queue(path, f"d{i}", self.clock, self.store,
+                               ttl=self.TTL) for i in range(n_daemons)]
+        self.held = [None] * n_daemons
+        self.open = {k: False for k in self.KEYS}
+        self.lease = {k: None for k in self.KEYS}   # (daemon, token, t)
+        self.last_token = {k: 0 for k in self.KEYS}
+        self.generations = {k: 0 for k in self.KEYS}
+        self.services = {k: 0 for k in self.KEYS}
+        self.fenced = 0
+        self.compactions = 0
+
+    def _expired_lease(self, key: str) -> bool:
+        lease = self.lease[key]
+        return lease is None or self.t[0] - lease[2] > self.TTL
+
+    def run_op(self, op, i: int, key: str) -> None:
+        self.t[0] += 0.001              # unique submit ids per op
+        if op == "submit":
+            accepted = self.daemons[i].submit(
+                _Req(key, t=self.t[0]),
+                job_type=JOB_TYPES[self.generations[key] % len(JOB_TYPES)])
+            assert accepted == (not self.open[key]), \
+                "submit must accept iff the key has no open job group"
+            if accepted:
+                self.open[key] = True
+                self.generations[key] += 1
+        elif op == "claim":
+            if self.held[i] is not None:
+                return                   # one job at a time per daemon
+            tk = self.daemons[i].claim()
+            if tk is None:
+                return
+            assert self.open[tk.key], "claimed a key with no open job"
+            assert self._expired_lease(tk.key), \
+                "claim granted while another claim was live: double lease"
+            assert tk.token > self.last_token[tk.key], \
+                "fencing tokens must be strictly increasing per key"
+            self.last_token[tk.key] = tk.token
+            self.lease[tk.key] = (i, tk.token, self.t[0])
+            self.held[i] = tk
+        elif op == "service":
+            tk, self.held[i] = self.held[i], None
+            if tk is None:
+                return
+            try:
+                self.daemons[i].done(tk)
+            except FencedClaimError:
+                self.fenced += 1
+                lease = self.lease[tk.key]
+                assert lease is not None and lease[0] != i, \
+                    "done fenced although this daemon still held the lease"
+                return
+            lease = self.lease[tk.key]
+            if lease is not None and lease[0] == i and lease[1] == tk.token:
+                self.open[tk.key] = False
+                self.lease[tk.key] = None
+                self.services[tk.key] += 1
+                return
+            # stale ticket: its generation already closed (idempotent
+            # no-op) — it must NOT have closed a re-armed generation
+            if self.open[tk.key]:
+                assert self.daemons[i]._canonical(tk.key) is not None, \
+                    "a stale ticket's done closed the next generation"
+        elif op == "die":
+            # the daemon restarts: its held ticket is forgotten (the claim
+            # stays on disk until the TTL fences it out) and its successor
+            # cold-folds the whole store
+            self.held[i] = None
+            self.daemons[i] = _queue(self.path, f"d{i}", self.clock,
+                                     self.store, ttl=self.TTL)
+        elif op == "compact":
+            self.store.close()           # seal this pid's live segment
+            stats = compact_store(self.path, retention_s=0.0,
+                                  now=self.t[0], clock=self.clock)
+            self.compactions += int(stats.folded)
+        elif op == "tick":
+            self.t[0] += self.TTL / 2 + 0.1
+        else:                            # pragma: no cover
+            raise AssertionError(op)
+
+    def drain(self, max_rounds: int = 60) -> None:
+        for _ in range(max_rounds):
+            if not any(self.open.values()) \
+                    and all(h is None for h in self.held):
+                break
+            progressed = False
+            for i in range(len(self.daemons)):
+                if self.held[i] is not None:
+                    self.run_op("service", i, "")
+                    progressed = True
+                else:
+                    before = self.held[i]
+                    self.run_op("claim", i, "")
+                    progressed = progressed or self.held[i] is not before
+            if not progressed:
+                self.run_op("tick", 0, "")  # expire zombie leases
+        assert not any(self.open.values()), \
+            f"queue failed to drain: {self.open}"
+
+    def check_final(self) -> None:
+        for k in self.KEYS:
+            assert self.services[k] == self.generations[k], \
+                (f"{k}: {self.generations[k]} accepted generations but "
+                 f"{self.services[k]} accepted services — not exactly-once")
+        cold = _queue(self.path, "auditor", self.clock, self.store)
+        assert len(cold) == 0, "a cold fold disagrees: jobs still open"
+
+
+_FLEET_OPS = ("submit", "claim", "service", "die", "compact", "tick")
+
+
+def _run_fleet_schedule(schedule, n_daemons: int = 3) -> _FleetFuzz:
+    """One schedule: a list of (op, daemon_index, key_index) triples."""
+    with tempfile.TemporaryDirectory() as d:
+        fuzz = _FleetFuzz(os.path.join(d, "store"), n_daemons=n_daemons)
+        for op, i, ki in schedule:
+            fuzz.run_op(op, i % len(fuzz.daemons),
+                        fuzz.KEYS[ki % len(fuzz.KEYS)])
+        fuzz.drain()
+        fuzz.check_final()
+        fuzz.store.close()
+        return fuzz
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(schedule=st.lists(
+        st.tuples(st.sampled_from(_FLEET_OPS),
+                  st.integers(min_value=0, max_value=2),
+                  st.integers(min_value=0, max_value=2)),
+        min_size=1, max_size=25))
+    def test_fleet_schedule_is_exactly_once_under_fencing(schedule):
+        """ISSUE 9 acceptance property: any interleaving of {submit, claim,
+        service, die, compact, tick} across 3 daemons grants each job's
+        lease exactly once at a time, fences superseded writers, and drains
+        to every accepted job serviced exactly once."""
+        _run_fleet_schedule(schedule)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_fleet_schedule_is_exactly_once_under_fencing():
+        pass
+
+
+def test_600_seeded_fleet_schedules_exactly_once():
+    """The ISSUE 9 bar, hypothesis-independent: 600 seeded random schedules
+    (ops weighted toward the contended paths) across 3 daemons, every one
+    asserting the full lease/fencing invariant set after every op."""
+    weights = {"submit": 5, "claim": 6, "service": 5, "die": 2,
+               "compact": 1, "tick": 3}
+    bag = [op for op, w in weights.items() for _ in range(w)]
+    fenced = serviced = 0
+    for seed in range(600):
+        rng = random.Random(seed)
+        schedule = [(rng.choice(bag), rng.randrange(3), rng.randrange(3))
+                    for _ in range(rng.randint(4, 14))]
+        fuzz = _run_fleet_schedule(schedule)
+        fenced += fuzz.fenced
+        serviced += sum(fuzz.services.values())
+    assert serviced >= 600, "the sweep barely exercised the queue"
+    assert fenced > 0, \
+        "600 schedules never produced a fenced zombie done — the sweep " \
+        "lost its teeth"

@@ -304,13 +304,14 @@ def test_dedupe_across_processes_via_store(tmp_path):
 
 
 def test_done_coalesces_racing_duplicate_submits(tmp_path):
-    """submit's dedupe is check-then-append: two servers racing within one
-    flush latency CAN both enqueue a cell. Servicing the cell must close
-    every open duplicate — one drift event costs one re-tune."""
+    """Two servers racing within one flush latency can both durably append
+    a submit for one cell. The fold coalesces them into ONE open job (the
+    earliest (t, id) is canonical, the loser is a ``dup_ids`` member) and
+    servicing the cell closes both — one drift event costs one re-tune."""
     path = str(tmp_path / "store")
     a = DurableRetuneQueue(path, worker="server-a")
     b = DurableRetuneQueue(path, worker="server-b")
-    # forge the race: b submits without ever refreshing over a's record
+    # forge the race: b's record lands without b ever folding a's
     assert a.submit(_Req("cell-x", t=1.0))
     b._store.append_control({"kind": "retune", "state": "submit",
                              "id": "cell-x@2/server-b", "key": "cell-x",
@@ -318,11 +319,52 @@ def test_done_coalesces_racing_duplicate_submits(tmp_path):
                              "predicted": 1.0, "reason": "drift",
                              "t": 2.0, "by": "server-b"})
     daemon = DurableRetuneQueue(path, worker="daemon-1")
-    assert len(daemon) == 2, "the race really produced duplicates"
+    assert len(daemon) == 1, "racing duplicates coalesce into one open job"
+    (ticket,) = daemon.open_tickets()
+    assert ticket.dup_ids == ["cell-x@2/server-b"], \
+        "the race really produced a duplicate — folded under the canonical"
     ticket = daemon.claim()
     daemon.done(ticket)
     assert len(daemon) == 0, "one service closes every duplicate"
     assert DurableRetuneQueue(path, worker="daemon-2").claim() is None
+    # both ids are closed durably — a cold fold agrees
+    fresh = DurableRetuneQueue(path, worker="daemon-3")
+    assert all(tk.done for tk in fresh._tickets.values())
+
+
+def test_submit_commit_then_check_rejects_the_slipped_duplicate(tmp_path):
+    """The ISSUE 9 regression: the old check-then-append dedupe let both
+    racing submitters return True when the peer's record flushed inside
+    the check→append window. Acceptance is now judged on the post-append
+    read-back, so the racer whose submit did not become canonical reports
+    False — forced deterministically by landing the peer's record between
+    b's duplicate check and b's own flush."""
+    path = str(tmp_path / "store")
+    b = DurableRetuneQueue(path, worker="server-b")
+    real_append = b._store.append_control
+    raced = []
+
+    def racing_append(d):
+        if not raced:        # a's flush wins the disk race by one line
+            raced.append(True)
+            real_append({"kind": "job", "state": "submit",
+                         "id": "cell-x@1.0/server-a", "key": "cell-x",
+                         "objective": "obj", "observed": 2.0,
+                         "predicted": 1.0, "reason": "drift",
+                         "t": 1.0, "by": "server-a"})
+        real_append(d)
+
+    b._store.append_control = racing_append
+    try:
+        assert not b.submit(_Req("cell-x", t=2.0)), \
+            "post-append read-back must demote the slipped duplicate"
+    finally:
+        b._store.append_control = real_append
+    assert len(b) == 1, "one open job despite two durable submits"
+    (tk,) = b.open_tickets()
+    assert tk.id == "cell-x@1.0/server-a", "earliest (t, id) is canonical"
+    assert tk.dup_ids == ["cell-x@2.0/server-b"], \
+        "b's slipped submit coalesced under the canonical ticket"
 
 
 def test_queue_state_survives_compaction(tmp_path):

@@ -18,15 +18,26 @@ resident bytes against the enumerated twin at 10^7 cartesian (acceptance:
 >=100x lighter) plus construction-only rows at 10^9+ where enumeration is
 impossible (acceptance: sub-second).
 
+Tight-constraint rows (ISSUE 10) pit rejection against the propagating
+sampler on a 32^6 ≈ 1.07e9 cartesian whose feasible fraction is driven to
+~1e-2 / 1e-4 / 1e-6 by stacking pairwise modular constraints: each row
+measures time-to-first-sample and pool-seed (stratified) latency for a
+pure-rejection space (``PROPAGATE_BELOW = -1`` pin; raises where the draw
+budget exhausts) and for the shipping auto-routed sampler. The nightly
+acceptance assert (``--assert-propagating-win``) requires the propagating
+path to complete AND be no slower than rejection on every row at <= 1e-4.
+
 Results land in results/bench/space_scaling.json.
 
   PYTHONPATH=src python -m benchmarks.space_bench [--smoke]
+      [--assert-propagating-win]
   PYTHONPATH=src python -m benchmarks.run --only space
 """
 from __future__ import annotations
 
 import argparse
 import itertools
+import math
 import sys
 import time
 
@@ -52,6 +63,12 @@ GEN_GRID_FULL = GEN_GRID_SMOKE + [(32, 6, True),         # + 1.07e9
                                   (100, 6, True)]        # + 1.0e12
 REFERENCE_MAX = 1_050_000                        # python loop above: minutes
 N_NEIGHBOR_QUERIES = 512
+#: tight rows: stacked pairwise modular constraints on a 32^6 grid, each
+#: pair keeping TIGHT_PAIR_K/1024 of its plane — n pairs ⇒ ~(K/1024)^n
+#: feasible fraction: 1 ⇒ ~1e-2, 2 ⇒ ~1e-4, 3 ⇒ ~1e-6
+TIGHT_PAIR_K = 10
+TIGHT_GRID_SMOKE = [1]
+TIGHT_GRID_FULL = [1, 2, 3]
 
 
 def _params(k: int, d: int):
@@ -64,6 +81,105 @@ def _constraint_fns(k: int):
     cap = (k * k) // 2
     return [lambda c: c["p0"] * c["p1"] <= cap,
             lambda c: (c["p2"] + c["p3"]) % 4 != 0]
+
+
+def _tight_constraints(n_pairs: int):
+    """``n_pairs`` stacked pairwise restrictions over disjoint param pairs;
+    each keeps ~TIGHT_PAIR_K/1024 of its (32 x 32) plane, so fractions
+    multiply. Pairwise-over-disjoint-pairs is the worst reasonable case for
+    rejection (fractions compound) while staying exactly the shape the
+    per-dimension pruner resolves at each pair's second level."""
+    cons = []
+    for p in range(n_pairs):
+        a, b = f"p{2 * p}", f"p{2 * p + 1}"
+        cons.append(VectorConstraint(
+            (lambda a, b: lambda c: (c[a] * 33 + c[b]) % 1024
+             < TIGHT_PAIR_K)(a, b),
+            name=f"tight_{a}x{b}"))
+    return cons
+
+
+def _tight_rows(rng: np.random.Generator, *, small: bool):
+    """Rejection vs propagating on ~1e9-cartesian spaces of sinking
+    feasible fraction. Fresh spaces per path so adaptive state (EWMA,
+    dead-prefix memo) never leaks between the contestants."""
+    pool_n = 256 if small else 2048
+    out = []
+    for n_pairs in (TIGHT_GRID_SMOKE if small else TIGHT_GRID_FULL):
+        params = _params(32, 6)
+        fraction = (TIGHT_PAIR_K / 1024.0) ** n_pairs
+        row = {"cartesian": 32 ** 6, "n_constraints": n_pairs,
+               "feasible_fraction_nominal": fraction, "pool_n": pool_n}
+
+        # -- pure rejection (the pre-ISSUE-10 behavior, pinned) -------------
+        rej = GenerativeSpace(params, _tight_constraints(n_pairs),
+                              name=f"tight_rej_{n_pairs}")
+        rej.PROPAGATE_BELOW = -1.0          # instance pin: legacy sampler
+        t0 = time.perf_counter()
+        try:
+            rej.sample_feasible(rng, 1)
+            row["rejection_first_sample_s"] = time.perf_counter() - t0
+            row["rejection_raised"] = False
+        except ValueError:
+            row["rejection_first_sample_s"] = time.perf_counter() - t0
+            row["rejection_raised"] = True
+        t0 = time.perf_counter()
+        try:
+            rej_pool = rej.stratified_feasible(rng, pool_n)
+            row["rejection_pool_seed_s"] = time.perf_counter() - t0
+            row["rejection_pool_raised"] = False
+            # rejection pads a short draw batch with duplicates: the pool
+            # it returns may hold orders of magnitude fewer UNIQUE configs
+            row["rejection_pool_unique"] = int(np.unique(rej_pool).size)
+        except ValueError:
+            row["rejection_pool_seed_s"] = time.perf_counter() - t0
+            row["rejection_pool_raised"] = True
+            row["rejection_pool_unique"] = 0
+
+        # -- propagating sampler (the auto-router's below-threshold path) ---
+        prop = GenerativeSpace(params, _tight_constraints(n_pairs),
+                               name=f"tight_prop_{n_pairs}")
+        prop._accept_ewma = 0.0             # pin the propagating path: the
+        # row compares the two samplers, not the router's warmup luck
+        t0 = time.perf_counter()
+        first = prop.sample_feasible(rng, 1)
+        row["prop_first_sample_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        pool = prop.stratified_feasible(rng, pool_n)
+        row["prop_pool_seed_s"] = time.perf_counter() - t0
+        assert prop._feasible_mask(first).all()
+        assert prop._feasible_mask(pool).all()
+        row["prop_pool_unique"] = int(np.unique(pool).size)
+        row["prop_draws"] = int(prop._prop_draws)
+        row["dead_prefixes_memoized"] = len(prop._dead_prefixes)
+        # the honest pool metric is cost per UNIQUE feasible config: a
+        # rejection pool that exhausts its budget returns mostly duplicate
+        # padding, which seeds an acquisition round with nothing new
+        rej_per_unique = (math.inf if row["rejection_pool_unique"] == 0
+                          else row["rejection_pool_seed_s"]
+                          / row["rejection_pool_unique"])
+        prop_per_unique = (row["prop_pool_seed_s"]
+                           / max(row["prop_pool_unique"], 1))
+        row["rejection_pool_per_unique_s"] = (
+            None if rej_per_unique == math.inf else rej_per_unique)
+        row["prop_pool_per_unique_s"] = prop_per_unique
+        # first-sample leg: no slower than rejection, or inside the
+        # milliseconds bound when a lucky early rejection batch hit
+        # (rejection's first-sample time is a high-variance draw; the
+        # propagating DFS is deterministic)
+        row["propagating_wins"] = bool(
+            (row["rejection_raised"]
+             or row["prop_first_sample_s"]
+             <= max(row["rejection_first_sample_s"], 0.05))
+            and prop_per_unique <= rej_per_unique)
+        out.append(row)
+        emit(f"space/tight_first_sample_f{fraction:.0e}",
+             row["prop_first_sample_s"] * 1e6,
+             "rejection " + ("RAISED" if row["rejection_raised"] else
+                             f"{row['rejection_first_sample_s'] * 1e6:.0f}us"))
+        emit(f"space/tight_pool_seed_f{fraction:.0e}",
+             row["prop_pool_seed_s"] * 1e6, f"pool={pool_n}")
+    return out
 
 
 def _reference_enumerate(params, cons):
@@ -103,7 +219,8 @@ def _time_dict_probes(space: SearchSpace, rng: np.random.Generator, n: int):
     return (time.perf_counter() - t0) / n
 
 
-def main(repeats: int = 0, *, small: bool = False) -> None:
+def main(repeats: int = 0, *, small: bool = False,
+         assert_propagating_win: bool = False) -> None:
     # `repeats` honors the benchmarks.run suite convention (fn(reps) for a
     # global --repeats override); enumeration timings are single-shot, so
     # extra repeats only re-run the grid and keep the last measurement.
@@ -234,6 +351,9 @@ def main(repeats: int = 0, *, small: bool = False) -> None:
         emit(f"space/generative_first_sample_{space.cartesian_size}",
              t_first * 1e6, f"accept~{space._accept_ewma:.2f}")
 
+    # -- tight-constraint rows: rejection vs propagating (ISSUE 10) ---------
+    tight_rows = _tight_rows(rng, small=small)
+
     biggest = rows[-1]
     acceptance = {
         "cartesian": biggest["cartesian"],
@@ -265,17 +385,48 @@ def main(repeats: int = 0, *, small: bool = False) -> None:
         (acceptance["generative_construct_1e9_s"] is not None
          and acceptance["generative_construct_1e9_s"] < 1.0)
         if not small else None)
+    # ISSUE 10 acceptance: at feasible fraction <= 1e-4 on the 1e9 grid,
+    # the propagating path must complete in milliseconds AND be no slower
+    # than rejection (which raises or stalls there)
+    hard_tight = [t for t in tight_rows
+                  if t["feasible_fraction_nominal"] <= 1e-4]
+    acceptance["propagating_wins_at_1e-4_and_below"] = (
+        all(t["propagating_wins"] for t in hard_tight)
+        if hard_tight else None)
+    acceptance["propagating_first_sample_worst_s"] = (
+        max(t["prop_first_sample_s"] for t in tight_rows)
+        if tight_rows else None)
 
     payload = {"rows": rows, "generative_rows": gen_rows,
-               "acceptance": acceptance}
+               "tight_rows": tight_rows, "acceptance": acceptance}
     path = save_json("space_scaling", payload)
     print(f"# wrote {path}", file=sys.stderr)
+    if assert_propagating_win:
+        ok = acceptance["propagating_wins_at_1e-4_and_below"]
+        if ok is None:
+            print("# --assert-propagating-win needs the full grid "
+                  "(no rows at <= 1e-4 in --smoke)", file=sys.stderr)
+            sys.exit(2)
+        if not ok:
+            losers = [t for t in hard_tight if not t["propagating_wins"]]
+            print(f"# ACCEPTANCE FAILED: propagating slower than rejection "
+                  f"on {len(losers)} tight row(s): {losers}",
+                  file=sys.stderr)
+            sys.exit(1)
+        print("# acceptance ok: propagating <= rejection at <= 1e-4",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", "--small", dest="smoke", action="store_true",
                     help="CI smoke grid (enumerated cartesian <= ~1e5, "
-                         "generative <= 1e7)")
+                         "generative <= 1e7, tight rows at ~1e-2 only)")
+    ap.add_argument("--assert-propagating-win", action="store_true",
+                    help="exit nonzero unless the propagating sampler "
+                         "completes and is no slower than rejection on "
+                         "every tight row at feasible fraction <= 1e-4 "
+                         "(nightly acceptance)")
     args = ap.parse_args()
-    main(small=args.smoke)
+    main(small=args.smoke,
+         assert_propagating_win=args.assert_propagating_win)

@@ -73,6 +73,14 @@ class BOConfig:
     pool_incumbents: int = 3              # best-k whose neighborhoods join
     pool_lhs_every: int = 16              # LHS refresh cadence (rounds)
     pool_lhs_points: int = 64
+    # -- surrogate-guided pool seeding (DESIGN.md §15) -----------------------
+    # after warmup, a slice of each round's pool comes from coordinate-
+    # exchange refinement of the GP's top-k posterior-mean incumbents; each
+    # exchange step is validated by the space's per-dimension pruner
+    # (axis_exchange), never by rejection draws
+    pool_refine_topk: int = 3             # posterior-mean incumbents refined
+    pool_refine_steps: int = 2            # exchange sweeps per incumbent
+    pool_refine_max: int = 256            # refined-candidate cap per round
     predict_chunk: int = 8192             # jax-engine pool prediction chunk
     # -- transfer-aware warm start (DESIGN.md §11) ---------------------------
     warm_topk: int = 5                    # prior best configs re-evaluated first
@@ -437,9 +445,54 @@ class BOStrategy(Strategy):
             return self.space.stratified_feasible(self.rng, m)
         return _stratified_indices(self.space.size, m, self.rng)
 
+    def _refine_pool(self) -> Optional[np.ndarray]:
+        """Coordinate-exchange refinement of the GP's top-k posterior-mean
+        incumbents (ROADMAP "interaction-aware seed"). Each incumbent is
+        walked one axis at a time: the move set comes from the space's
+        ``axis_exchange`` — on the generative backend that is the
+        constraint-propagating per-dimension pruner, so no rejection draws
+        happen even on tightly-constrained grids — and the walk steps to
+        the candidate with the best posterior mean. Every candidate the GP
+        scored joins the pool (the interaction-aware slice), capped at
+        ``pool_refine_max``."""
+        cfg, space = self.cfg, self.space
+        if (cfg.pool_refine_topk <= 0 or self._phase != "bo"
+                or not self._finite_obs):
+            return None
+        obs = sorted({int(i) for _, i in self._finite_obs})
+        mu_obs, _ = self.gp.predict_at(space.X_norm[np.asarray(obs, np.int64)])
+        order = np.argsort(mu_obs)[:cfg.pool_refine_topk]
+        out: List[int] = []
+        seen: set = set()
+        for k in order:
+            idx, cur_mu = obs[int(k)], float(mu_obs[int(k)])
+            for _ in range(max(cfg.pool_refine_steps, 1)):
+                moved = False
+                for j in self.rng.permutation(space.dim):
+                    cands = space.axis_exchange(idx, int(j))
+                    if not cands:
+                        continue
+                    mu_c, _ = self.gp.predict_at(
+                        space.X_norm[np.asarray(cands, np.int64)])
+                    for c in cands:
+                        if c not in seen and len(out) < cfg.pool_refine_max:
+                            seen.add(c)
+                            out.append(int(c))
+                    b = int(np.argmin(mu_c))
+                    if float(mu_c[b]) < cur_mu:
+                        idx, cur_mu = int(cands[b]), float(mu_c[b])
+                        moved = True
+                if not moved or len(out) >= cfg.pool_refine_max:
+                    break
+            if len(out) >= cfg.pool_refine_max:
+                break
+        return np.asarray(out, np.int64) if out else None
+
     def _build_pool(self) -> np.ndarray:
-        """Pool = incumbent Hamming neighborhoods + stratified random draws
-        (+ periodic LHS refresh), minus evaluated/pending configs."""
+        """Pool = incumbent Hamming neighborhoods + coordinate-exchange
+        refinement of the GP's top posterior-mean incumbents + stratified
+        random draws (+ periodic LHS refresh), minus evaluated/pending
+        configs."""
         cfg, space, rng = self.cfg, self.space, self.rng
         parts: List[np.ndarray] = []
         if self._finite_obs and cfg.pool_incumbents > 0:
@@ -447,6 +500,9 @@ class BOStrategy(Strategy):
                 nbrs = space.hamming_neighbors(int(i))
                 if nbrs:
                     parts.append(np.asarray(nbrs, np.int64))
+        refined = self._refine_pool()
+        if refined is not None and refined.size:
+            parts.append(refined)
         parts.append(self._pool_strata(cfg.pool_size))
         if (cfg.pool_lhs_points > 0
                 and self._round % max(cfg.pool_lhs_every, 1) == 0):

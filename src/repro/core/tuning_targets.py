@@ -18,6 +18,7 @@ import hashlib
 import json
 import math
 import os
+import re
 import subprocess
 import sys
 from typing import Any, Dict, List, Optional
@@ -25,6 +26,8 @@ from typing import Any, Dict, List, Optional
 from repro.core.objectives import Objective
 from repro.core.searchspace import Param, SearchSpace, VectorConstraint
 from repro.launch.roofline import HBM_BYTES
+from repro.parallel.sharding import (VMEM_BYTES, attn_tile_occupancy,
+                                     flash_vmem_bytes)
 
 REPO = os.path.join(os.path.dirname(__file__), "..", "..", "..")
 
@@ -32,7 +35,15 @@ REPO = os.path.join(os.path.dirname(__file__), "..", "..", "..")
 GLOBAL_BATCH = 32
 
 
-def sharding_space(arch: str, shape: str, wide: bool = False) -> SearchSpace:
+def _seq_tokens(shape: str) -> int:
+    """Sequence length a cell shape implies (``train_4k`` → 4096);
+    unknown shapes use the production default."""
+    m = re.search(r"(\d+)k$", shape)
+    return int(m.group(1)) * 1024 if m else 4096
+
+
+def sharding_space(arch: str, shape: str, wide: bool = False,
+                   hard: bool = False) -> SearchSpace:
     """Distribution knobs applicable to the given cell.
 
     ``wide=True`` opens the full chunk-size grids (cartesian >10^6, >2M for
@@ -40,7 +51,19 @@ def sharding_space(arch: str, shape: str, wide: bool = False) -> SearchSpace:
     vectorized ``VectorConstraint`` column predicates — the scale the old
     per-row Python enumeration could not reach. The default narrow space is
     unchanged, so existing tuning caches and journals stay valid.
+
+    ``hard=True`` (implies ``wide``) is the tightly-constrained variant the
+    propagating sampler (DESIGN.md §15) unlocks: every cell gets the
+    ``attn_block_q`` grid plus VMEM-residency and occupancy constraints
+    coupling four-plus knobs at once (double-buffered flash tiles and the
+    chunked-logits tile must co-reside in per-core VMEM; the attention grid
+    must keep every core busy). Rejection sampling stalls on grids like
+    these — feasible fractions sink orders of magnitude below the wide
+    variant's — so the space is published under a NEW fingerprint family
+    (``sharding_hard[...]``): hard-grid journals never mix with wide ones.
     """
+    if hard:
+        wide = True
     if not wide:
         params = [
             Param("remat", ("none", "dots", "full")),
@@ -122,6 +145,48 @@ def sharding_space(arch: str, shape: str, wide: bool = False) -> SearchSpace:
         params.append(Param("mlstm_chunk", (0, 16, 32, 48, 64, 96, 128,
                                             192, 256)))
     params.append(Param("embed_rule", ("data", "none")))  # ZeRO-3 on/off
+    if hard:
+        if not any(p.name == "attn_block_q" for p in params):
+            params.append(Param("attn_block_q", (128, 192, 256, 384, 512,
+                                                 768, 1024, 1536, 2048,
+                                                 3072, 4096)))
+        seq = _seq_tokens(shape)
+        cons += [
+            # double-buffered flash tiles plus the chunked-logits tile
+            # (bf16 activations + f32 accumulator over a 128-row block)
+            # must co-reside in per-core VMEM — couples flash, both
+            # attention blocks, and logits_chunk in one predicate
+            VectorConstraint(
+                lambda c: (c["flash"] * 2
+                           * flash_vmem_bytes(c["attn_block_q"],
+                                              c["attn_block_kv"])
+                           + c["logits_chunk"] * 128 * 6) <= VMEM_BYTES,
+                name="vmem_coresidency"),
+            # the q×kv attention grid (after q-chunking) must keep every
+            # core busy each wave
+            VectorConstraint(
+                lambda c: attn_tile_occupancy(
+                    seq // c["attn_q_chunks"], c["attn_block_q"],
+                    c["attn_block_kv"]) >= 1.0,
+                name="occupancy_floor"),
+            # direct attention has no streaming stats: its full q-block of
+            # logits must fit outright, steeply capping the block product
+            VectorConstraint(
+                lambda c: (c["flash"] == 1)
+                | (c["attn_block_q"] * c["attn_block_kv"] * 4
+                   <= VMEM_BYTES // 4),
+                name="direct_logits_fit"),
+            # no ragged tiles: the q-chunking times the q block must divide
+            # the sequence exactly, and so must the kv block — the
+            # divisibility restrictions of real kernel grids (the paper's
+            # own constraint family), and the main tightness driver here
+            VectorConstraint(
+                lambda c: seq % (c["attn_q_chunks"] * c["attn_block_q"]) == 0,
+                name="q_tiles_divide_seq"),
+            VectorConstraint(lambda c: seq % c["attn_block_kv"] == 0,
+                             name="kv_tiles_divide_seq"),
+        ]
+        return SearchSpace(params, cons, name=f"sharding_hard[{arch}×{shape}]")
     return SearchSpace(params, cons, name=f"sharding_wide[{arch}×{shape}]")
 
 

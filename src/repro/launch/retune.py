@@ -125,7 +125,8 @@ class RetuneDaemon:
                  strategy_factory: Optional[Callable] = None,
                  budget: int = 40, seed: int = 0,
                  worker: Optional[str] = None, claim_ttl: float = 3600.0,
-                 clock=time.time, verbose: bool = False, store=None):
+                 clock=time.time, verbose: bool = False, store=None,
+                 quarantine_after: int = 0):
         if strategy_factory is None:
             from repro.core.strategies import make_strategy
             strategy_factory = lambda: make_strategy("ei")  # noqa: E731
@@ -148,12 +149,20 @@ class RetuneDaemon:
                       else TuningRecordStore(store_path, lazy=True))
         self.queue = TuningJobQueue(store_path, worker=worker,
                                     claim_ttl=claim_ttl, clock=clock,
-                                    appender=self.store)
+                                    appender=self.store,
+                                    quarantine_after=quarantine_after)
         self.worker = self.queue.worker
         self.serviced = 0
         #: ``done`` attempts refused because this daemon's lease was
         #: superseded while it serviced (paused past claim_ttl)
         self.fenced = 0
+
+    @property
+    def quarantined(self) -> int:
+        """Jobs this daemon's queue fold saw quarantined: groups that
+        burned ``quarantine_after`` consecutive claimants and were closed
+        terminally instead of re-arming forever."""
+        return self.queue.quarantined
 
     def step(self):
         """Claim and service at most one job; returns the TuneResult, or
@@ -219,6 +228,10 @@ def main() -> None:
                     help="seconds between queue polls when idle")
     ap.add_argument("--claim-ttl", type=float, default=3600.0,
                     help="seconds before an unfinished claim re-arms")
+    ap.add_argument("--quarantine-after", type=int, default=5,
+                    help="quarantine a job after this many consecutive "
+                         "claimants die on it (terminal state instead of "
+                         "re-arming forever; 0 disables)")
     ap.add_argument("--worker", default=None,
                     help="worker name in claim/done records (default: "
                          "proc-<pid>); name each daemon of a fleet")
@@ -229,7 +242,9 @@ def main() -> None:
                               args.strategy),
                           budget=args.budget, seed=args.seed,
                           worker=args.worker,
-                          claim_ttl=args.claim_ttl, verbose=True)
+                          claim_ttl=args.claim_ttl,
+                          quarantine_after=args.quarantine_after,
+                          verbose=True)
     if args.once:
         n = daemon.run(max_requests=len(daemon.queue))
         print(f"[retune] drained: {n} request(s) serviced")

@@ -170,3 +170,36 @@ def constrain(x: jax.Array, logical: Sequence[Optional[str]], px: ShardCtx) -> j
 def act_sharding(shape: Sequence[int], logical: Sequence[Optional[str]],
                  mesh: Mesh, pcfg: ParallelConfig) -> NamedSharding:
     return NamedSharding(mesh, resolve_spec(shape, logical, pcfg.act_rules, mesh))
+
+
+# ---------------------------------------------------------------------------
+# kernel-residency arithmetic for HARD-constrained tuning grids
+# ---------------------------------------------------------------------------
+# Pure column arithmetic (ints or numpy arrays) so the same expressions work
+# as vectorized ``VectorConstraint`` predicates over a GenerativeSpace's
+# candidate columns (repro.core.tuning_targets.sharding_space(hard=True)).
+
+#: per-core on-chip vector memory (v5e; matches launch/roofline.VMEM_BYTES)
+VMEM_BYTES = 16 * 2 ** 20
+
+
+def flash_vmem_bytes(block_q, block_kv, head_dim=128, *,
+                     dtype_bytes=2, acc_bytes=4):
+    """Per-grid-step VMEM residency of the blockwise flash-attention kernel:
+    the bf16 Q/K/V tiles, the f32 logits tile, the f32 output accumulator,
+    and the running max/denominator stats. Vectorizes over numpy columns."""
+    q_tile = block_q * head_dim * dtype_bytes
+    kv_tiles = 2 * block_kv * head_dim * dtype_bytes      # K and V
+    logits = block_q * block_kv * acc_bytes
+    acc = block_q * head_dim * acc_bytes
+    stats = 2 * block_q * acc_bytes                       # rowmax + denom
+    return q_tile + kv_tiles + logits + acc + stats
+
+
+def attn_tile_occupancy(seq_len, block_q, block_kv, *, cores=8):
+    """Grid steps per core of a (seq/block_q) x (seq/block_kv) attention
+    tiling. Below 1.0 some cores idle every wave — the occupancy floor the
+    hard grids enforce. Ceil-divides, so oversized blocks count as one."""
+    q_steps = -(-seq_len // block_q)
+    kv_steps = -(-seq_len // block_kv)
+    return (q_steps * kv_steps) / cores

@@ -219,7 +219,9 @@ def _compact_locked(path: str, retention_s: float, t_now: float,
                     int(d.get("token") or 0))
         elif state == "release":
             group_claims.get(key, set()).discard(int(d.get("token") or 0))
-        elif state == "done":
+        elif state in ("done", "quarantine"):
+            # quarantine is terminal exactly like done (a fresh-token close
+            # of a poison group) — same fencing, same retention folding
             token = d.get("token")
             if token is not None \
                     and int(token) < max(group_claims.get(key, ()),

@@ -12,9 +12,10 @@ daemons** via fencing tokens (``repro.store.fence``):
 
     {"kind": "job", "state": "submit", "id", "key", "job_type", "objective",
      "observed", "predicted", "reason", "t", "by"[, "budget"]}
-    {"kind": "job", "state": "claim",   "id", "key", "by", "t", "token"}
-    {"kind": "job", "state": "release", "id", "key", "by", "t", "token"}
-    {"kind": "job", "state": "done",    "id", "key", "by", "t", "token"}
+    {"kind": "job", "state": "claim",      "id", "key", "by", "t", "token"}
+    {"kind": "job", "state": "release",    "id", "key", "by", "t", "token"}
+    {"kind": "job", "state": "done",       "id", "key", "by", "t", "token"}
+    {"kind": "job", "state": "quarantine", "id", "key", "by", "t", "token"}
 
 ``job_type`` ∈ {"retune", "cold_tune", "scheduled_retune", "bench_sweep"}
 (anything a fleet worker knows how to service); legacy ``kind="retune"``
@@ -53,6 +54,17 @@ Protocol (the fold of a key's records is the truth):
     another daemon re-claimed. The
     retune engine run stamps the same token into every journaled
     observation (``meta["fence"]``), which ``HotConfigSource`` checks.
+  * **Poison jobs are quarantined, not re-armed forever.** With
+    ``quarantine_after=K > 0``, a claimant that finds K or more *expired
+    unreleased* leases on a group (K consecutive claimants took the job
+    and died or stalled past ``claim_ttl`` — voluntary releases never
+    count) does not claim it again: it obtains a fresh fencing token and
+    appends a ``quarantine`` record per open submit id (coalescing like
+    ``done``). The fold treats ``quarantine`` as a token-fenced terminal
+    state — the group closes, ``open_tickets`` stops offering it, and the
+    ``quarantined`` counter ticks. A NEW submit for the key re-arms it
+    fresh (fresh ids, higher fence floor). ``quarantine_after=0``
+    (default) disables the check: folds are byte-identical to PR 9.
 
 Crash matrix:
   * submitter dies after ``submit`` — the job is on disk; any daemon
@@ -120,11 +132,19 @@ class JobTicket:
     budget: Optional[int] = None
     claims: List[_Claim] = field(default_factory=list)
     done: bool = False
+    #: terminal without service: K consecutive claimants died on this job
+    quarantined: bool = False
     #: the fencing token of the lease ``claim()`` granted the caller; 0 on
     #: tickets obtained any other way (``open_tickets``)
     token: int = 0
     #: other open submit ids coalesced into this canonical ticket
     dup_ids: List[str] = field(default_factory=list)
+
+    @property
+    def terminal(self) -> bool:
+        """Closed for good: serviced (``done``) or poisoned
+        (``quarantined``). Terminal tickets never re-arm."""
+        return self.done or self.quarantined
 
 
 #: legacy alias — PR 5 callers/tests constructed these by name
@@ -139,7 +159,7 @@ class TuningJobQueue:
 
     def __init__(self, path: str, *, worker: Optional[str] = None,
                  claim_ttl: float = 3600.0, clock=time.time, appender=None,
-                 use_index: bool = True):
+                 use_index: bool = True, quarantine_after: int = 0):
         """``appender`` shares an already-open ``TuningRecordStore`` for the
         control-record writes. Pass the process's existing appender (the
         serve loop passes its ``ProdRecorder``'s) — compaction judges
@@ -156,6 +176,9 @@ class TuningJobQueue:
         self.path = path
         self.worker = worker or f"proc-{os.getpid()}"
         self.claim_ttl = float(claim_ttl)
+        #: quarantine a job once this many consecutive claimants took its
+        #: lease and expired without releasing or finishing (0 = never)
+        self.quarantine_after = int(quarantine_after)
         self.clock = clock
         self._owns_store = appender is None
         self._store = (appender if appender is not None
@@ -167,6 +190,8 @@ class TuningJobQueue:
         self._token_floor: Dict[str, int] = {}
         #: fenced ``done`` records the fold refused (superseded claimants)
         self.rejected_writes = 0
+        #: submit ids this instance folded into the quarantined state
+        self.quarantined = 0
         self.seeded_from_index = False
         start_offsets = None
         if use_index:
@@ -250,27 +275,36 @@ class TuningJobQueue:
                         seen=float(self.clock())))
             elif entry is not None:
                 entry.released = True
-        elif state == "done":
+        elif state in ("done", "quarantine"):
+            token_floor = int(d.get("token") or 0)
+            key = str(d.get("key", ""))
+            if key and token_floor > self._token_floor.get(key, 0):
+                self._token_floor[key] = token_floor
             tk = self._tickets.get(rid)
-            if tk is None or tk.done:
+            if tk is None or tk.terminal:
                 return
             token = d.get("token")
             if token is not None:
-                # fence: a done below the group's highest UNRELEASED claim
-                # token is a superseded claimant's late write — refuse to
-                # close the job. Released claims are aborted racers that
-                # explicitly backed off; they must not fence the winner.
+                # fence: a done/quarantine below the group's highest
+                # UNRELEASED claim token is a superseded claimant's late
+                # write — refuse to close the job. Released claims are
+                # aborted racers that explicitly backed off; they must not
+                # fence the winner.
                 if int(token) < self._group_top(tk.key):
                     self.rejected_writes += 1
                     return
-            tk.done = True
+            if state == "quarantine":
+                tk.quarantined = True
+                self.quarantined += 1
+            else:
+                tk.done = True
 
     def _claim_target(self, rid: str, key: str) -> Optional[JobTicket]:
         """The open ticket a claim/release attaches to: its own id if still
         open, else dangling (a claim folding after its group closed belongs
         to no lease — the group it raced is already done)."""
         tk = self._tickets.get(rid)
-        return tk if tk is not None and not tk.done else None
+        return tk if tk is not None and not tk.terminal else None
 
     @staticmethod
     def _find_claim(tk: JobTicket, token: int, d: dict) -> Optional[_Claim]:
@@ -293,7 +327,7 @@ class TuningJobQueue:
     def _group(self, key: str) -> List[JobTicket]:
         """All open tickets of one key, canonical first."""
         return sorted((tk for tk in self._tickets.values()
-                       if tk.key == key and not tk.done),
+                       if tk.key == key and not tk.terminal),
                       key=lambda tk: (tk.t, tk.id))
 
     def _canonical(self, key: str) -> Optional[JobTicket]:
@@ -373,7 +407,8 @@ class TuningJobQueue:
         now = self.clock()
         seen_keys: set = set()
         order: List[JobTicket] = []
-        for tk in sorted((t for t in self._tickets.values() if not t.done),
+        for tk in sorted((t for t in self._tickets.values()
+                          if not t.terminal),
                          key=lambda t: (t.t, t.id)):
             if tk.key not in seen_keys:
                 seen_keys.add(tk.key)
@@ -384,9 +419,22 @@ class TuningJobQueue:
                 return got
         return None
 
+    def _burned_claims(self, key: str, now: float) -> int:
+        """Consecutive claimants this group has eaten: unreleased tokened
+        claims whose leases expired without a ``done``. Voluntary releases
+        (aborted racers, graceful shutdowns) never count — only leases
+        that silently died."""
+        return sum(1 for tk in self._group(key) for c in tk.claims
+                   if c.token > 0 and not c.released
+                   and now - c.seen > self.claim_ttl)
+
     def _try_claim(self, canon: JobTicket, now: float) -> Optional[JobTicket]:
         key = canon.key
         if self._lease(key, now) is not None:
+            return None
+        if self.quarantine_after > 0 \
+                and self._burned_claims(key, now) >= self.quarantine_after:
+            self._quarantine(canon, now)
             return None
         # tokens visible BEFORE our claim: the post-append check may only
         # back off for a lower-token claim that was NOT in this snapshot
@@ -422,6 +470,25 @@ class TuningJobQueue:
         tk.dup_ids = [g.id for g in self._group(key) if g.id != tk.id]
         return tk
 
+    def _quarantine(self, canon: JobTicket, now: float) -> None:
+        """Close a poison group terminally: take a FRESH fencing token
+        (permanently fencing every dead claimant out, exactly as a new
+        claim would) and append a ``quarantine`` record per open submit id,
+        coalescing like ``done``. Losing the token race is fine — the
+        winner either services the job or reaches this same verdict."""
+        key = canon.key
+        pre = {c.token for tk in self._group(key) for c in tk.claims}
+        floor = max(self._token_floor.get(key, 0), max(pre, default=0))
+        token = self._fence.issue(key, floor=floor, by=self.worker)
+        if token is None:
+            return
+        for cid in [g.id for g in self._group(key)]:
+            d = {"kind": "job", "state": "quarantine", "id": cid,
+                 "key": key, "by": self.worker, "t": float(now),
+                 "token": token}
+            self._store.append_control(d)
+            self._fold(d)
+
     def _release(self, rid: str, key: str, token: int) -> None:
         self._fence.release(key, token)
         d = {"kind": "job", "state": "release", "id": rid, "key": key,
@@ -453,7 +520,7 @@ class TuningJobQueue:
             getattr(ticket, "token", 0) or 0)
         self._refresh()
         tk = self._tickets.get(rid)
-        if tk is None or tk.done:
+        if tk is None or tk.terminal:
             # idempotent no-op: the group this ticket belonged to is already
             # closed (or GC'd by compaction). Critically, do NOT fall through
             # to the coalescing append — the key may have re-armed with a NEW
@@ -495,7 +562,8 @@ class TuningJobQueue:
         ``dup_ids``), oldest first."""
         self._refresh()
         out: List[JobTicket] = []
-        for key in {tk.key for tk in self._tickets.values() if not tk.done}:
+        for key in {tk.key for tk in self._tickets.values()
+                    if not tk.terminal}:
             grp = self._group(key)
             if grp:
                 grp[0].dup_ids = [g.id for g in grp[1:]]

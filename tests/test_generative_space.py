@@ -377,6 +377,42 @@ def test_deepseek_wide_pool_bo_end_to_end_through_engine(tmp_path):
     assert space.index_of(best_cfg) == res.best_idx
 
 
+def test_hard_sharding_grid_is_tight_coupled_and_samplable():
+    """The hard-constrained scenario grids the propagating sampler unlocks
+    (ISSUE 10): VMEM-coresidency + occupancy + tile-divisibility coupled
+    constraints on a 10^9 cartesian, published under a NEW fingerprint
+    family so hard-grid journals never mix with wide ones."""
+    from repro.core.tuning_targets import sharding_space
+    s = sharding_space("deepseek-v3-671b", "train_4k", hard=True)
+    assert isinstance(s, GenerativeSpace)
+    assert s.name.startswith("sharding_hard[")
+    assert s.cartesian_size > 10 ** 9
+    assert {"vmem_coresidency", "occupancy_floor",
+            "q_tiles_divide_seq"} <= {
+        getattr(c, "name", "") for c in s.constraints}
+    got = s.sample_feasible(np.random.default_rng(0), 64)
+    assert s._feasible_mask(got).all()
+    strat = s.stratified_feasible(np.random.default_rng(1), 64)
+    assert s._feasible_mask(strat).all()
+    est = s.feasible_fraction_interval()
+    assert est["hi"] < 0.05, "hard grid must be far tighter than wide"
+    # distinct fingerprint family: never collides with the wide grid
+    fa = SpaceFingerprint.of(s, objective="cell")
+    fb = SpaceFingerprint.of(
+        sharding_space("deepseek-v3-671b", "train_4k", wide=True),
+        objective="cell")
+    assert fa.digest != fb.digest
+    # identity is construction-stable within the family
+    fa2 = SpaceFingerprint.of(
+        sharding_space("deepseek-v3-671b", "train_4k", hard=True),
+        objective="cell")
+    assert fa.digest == fa2.digest
+    # every sampled config honours the no-ragged-tiles rule end-to-end
+    cfg = s.config(int(got[0]))
+    assert 4096 % (cfg["attn_q_chunks"] * cfg["attn_block_q"]) == 0
+    assert 4096 % cfg["attn_block_kv"] == 0
+
+
 def test_narrow_and_non_moe_wide_spaces_stay_enumerated():
     from repro.core.tuning_targets import sharding_space
     narrow = sharding_space("deepseek-v3-671b", "train_4k")
@@ -386,22 +422,290 @@ def test_narrow_and_non_moe_wide_spaces_stay_enumerated():
 
 
 def test_describe_reports_estimated_feasible_fraction():
-    """describe() surfaces the rejection sampler's acceptance EWMA as a
-    loudly-labeled ESTIMATE of the feasible fraction — and admits ignorance
-    before any draws exist (the EWMA initializes optimistically at 1.0, so
-    printing it unsampled would claim a fully feasible space)."""
+    """describe() surfaces a loudly-labeled feasible-fraction estimate:
+    a propagation-derived bracket before any draws exist (Knuth probe
+    descents — works without sampling), a Jeffreys interval over the
+    rejection sampler's accepted/attempted counts once draws exist."""
     gen = GenerativeSpace([Param("a", tuple(range(16))),
                            Param("b", tuple(range(16)))],
                           [lambda c: c["a"] > c["b"]], name="halfspace")
     before = gen.describe()
-    assert "unknown" in before and "ESTIMATE" not in before
+    assert "PROPAGATION" in before and "Jeffreys" not in before
+    est = gen.feasible_fraction_interval()
+    assert est["method"] == "propagation"
+    assert est["lo"] <= est["point"] <= est["hi"]
+    # a > b over a 16x16 grid keeps 120/256 ~ 0.47; unbiased probe
+    # descents must at least bracket a plausible nonzero mass
+    assert est["hi"] > 0.0
 
     rng = np.random.default_rng(0)
     gen.sample_feasible(rng, 64)
     after = gen.describe()
-    assert "ESTIMATE" in after and "draws" in after
-    # a > b over a 16x16 grid keeps 120/256 ~ 0.47; the EWMA (warmed from
-    # its optimistic 1.0 start) must land in a loose band around it
-    assert 0.2 < gen._accept_ewma < 0.9
-    frac = f"{gen._accept_ewma:.3g}"
-    assert frac in after
+    assert "Jeffreys" in after and "draws" in after
+    est = gen.feasible_fraction_interval()
+    assert est["method"] == "jeffreys"
+    # the true fraction is 120/256 ~ 0.47 and the interval has real
+    # counts behind it — it must cover the truth
+    assert est["lo"] < 120 / 256 < est["hi"]
+    assert f"{est['point']:.3g}" in after
+
+
+def test_feasible_fraction_interval_unconstrained_exact():
+    gen = GenerativeSpace([Param("a", tuple(range(8))),
+                           Param("b", tuple(range(8)))], name="freegrid")
+    est = gen.feasible_fraction_interval()
+    assert est == {"method": "exact", "point": 1.0, "lo": 1.0, "hi": 1.0}
+    assert "unconstrained" in gen.describe()
+
+
+# -- constraint-propagating sampler (DESIGN.md §15) --------------------------
+
+def force_propagation(gen):
+    """Sink the acceptance EWMA below the routing threshold so every draw
+    goes through the propagating sampler."""
+    gen._accept_ewma = 0.0
+    return gen
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_propagating_draws_match_rejection_verdicts(seed):
+    """Every propagated code must be feasible by the rejection sampler's
+    exact verdict (_feasible_mask == _constrain over the full grid)."""
+    params, cons = random_constrained_case(seed)
+    ref = reference_enumeration(params, cons)
+    if len(ref) == 0:
+        pytest.skip("all configs filtered")
+    enum, gen = twin_spaces(params, cons, name=f"prop{seed}")
+    force_propagation(gen)
+    feasible = set(int(c) for c in enum_codes(enum))
+    draws = gen.sample_feasible(np.random.default_rng(seed), 64)
+    assert gen._prop_draws > 0                     # propagation actually ran
+    assert all(int(c) in feasible for c in draws)
+
+
+def test_propagating_membership_parity_covers_full_feasible_set():
+    # small space: enough propagated draws must reach EVERY feasible config
+    # (propagation explores the same feasible set rejection does — no
+    # region is unreachable through the pruned per-dimension grids)
+    params = [Param("a", tuple(range(4))), Param("b", tuple(range(4))),
+              Param("c", tuple(range(3)))]
+    cons = [VectorConstraint(lambda c: (c["a"] + c["b"]) % 3 == 0, "ab"),
+            VectorConstraint(lambda c: c["c"] != 1, "c")]
+    enum, gen = twin_spaces(params, cons, name="cover")
+    force_propagation(gen)
+    feasible = set(int(c) for c in enum_codes(enum))
+    got = set(int(c) for c in
+              gen.sample_feasible(np.random.default_rng(0), 600))
+    assert got == feasible
+
+
+def test_propagating_fixed_seed_deterministic_on_fresh_spaces():
+    params, cons = tight_space()
+    a = force_propagation(GenerativeSpace(params, cons, name="da"))
+    b = force_propagation(GenerativeSpace(params, cons, name="db"))
+    d1 = a.sample_feasible(np.random.default_rng(11), 100)
+    d2 = b.sample_feasible(np.random.default_rng(11), 100)
+    np.testing.assert_array_equal(d1, d2)
+
+
+def test_loose_space_draws_byte_identical_to_legacy_rejection():
+    """The routing tentpole must not perturb loosely-constrained spaces:
+    the EWMA starts at 1.0 and never sinks below PROPAGATE_BELOW, so the
+    draw stream is byte-identical to the pre-propagation rejection loop
+    (re-implemented here verbatim as the pin)."""
+    params, cons = tight_space()          # ~3% acceptance: still "loose"
+
+    def legacy_rejection(space, rng, m):
+        out, got, attempts = [], 0, 0
+        ewma = 1.0
+        budget = max(64 * m, 1 << 20)
+        while got < m and attempts < budget:
+            rate = max(ewma, 1e-3)
+            batch = int(min(max(int((m - got) / rate) + 16, 256), 1 << 17))
+            codes = rng.integers(0, space.cartesian_size, size=batch,
+                                 dtype=np.int64)
+            kept = codes[space._feasible_mask(codes)]
+            ewma = 0.7 * ewma + 0.3 * (len(kept) / batch)
+            attempts += batch
+            if kept.size:
+                out.append(kept)
+                got += len(kept)
+        codes = np.concatenate(out)[:m]
+        if len(codes) < m:
+            fill = codes[rng.integers(0, len(codes), size=m - len(codes))]
+            codes = np.concatenate([codes, fill])
+        return codes
+
+    gen = GenerativeSpace(params, cons, name="loose")
+    ref = GenerativeSpace(params, cons, name="ref")
+    got = gen.sample_feasible(np.random.default_rng(13), 300)
+    want = legacy_rejection(ref, np.random.default_rng(13), 300)
+    np.testing.assert_array_equal(got, want)
+    assert gen._prop_draws == 0            # propagation never engaged
+
+
+def test_tight_1e9_space_first_sample_fast_where_rejection_raises():
+    """The acceptance criterion: at ~1e-6 feasible fraction over a 1e9
+    cartesian grid, pure rejection exhausts its budget and raises while
+    the auto-routed sampler falls back to propagation and succeeds."""
+    import time
+
+    def build(name):
+        # (2/1024)^3 ~ 7e-9 feasible: far beyond any rejection budget
+        params = [Param(f"p{k}", tuple(range(1, 33))) for k in range(6)]
+        cons = [VectorConstraint(
+                    lambda c: (c["p0"] * 33 + c["p1"]) % 1024 < 2, "t01"),
+                VectorConstraint(
+                    lambda c: (c["p2"] * 33 + c["p3"]) % 1024 < 2, "t23"),
+                VectorConstraint(
+                    lambda c: (c["p4"] * 33 + c["p5"]) % 1024 < 2, "t45")]
+        return GenerativeSpace(params, cons, name=name)
+
+    legacy = build("hard-legacy")
+    legacy.PROPAGATE_BELOW = -1.0          # pin pure rejection
+    with pytest.raises(ValueError, match="feasible"):
+        legacy.sample_feasible(np.random.default_rng(0), 4)
+
+    sp = build("hard-auto")
+    t0 = time.perf_counter()
+    draws = sp.sample_feasible(np.random.default_rng(0), 4)
+    dt = time.perf_counter() - t0
+    assert sp._feasible_mask(draws).all()
+    assert sp._prop_draws >= 4
+    assert dt < 2.0                        # ms-scale in practice; CI slack
+
+
+def test_stratified_propagation_stays_in_stratum():
+    # constraints on TRAILING params only: every top-digit stratum is
+    # feasible, so in-stratum propagation must fill all of them in place
+    params = [Param(f"p{k}", tuple(range(8))) for k in range(6)]
+    cons = [VectorConstraint(lambda c: (c["p4"] * 9 + c["p5"]) % 16 == 0)]
+    gen = force_propagation(GenerativeSpace(params, cons, name="strat-p"))
+    m = 64
+    got = gen.stratified_feasible(np.random.default_rng(2), m)
+    assert gen._feasible_mask(got).all()
+    cart = gen.cartesian_size
+    for i, code in enumerate(got):
+        assert i * cart // m <= int(code) < (i + 1) * cart // m
+
+
+def test_dead_end_memoization_populates_and_amortizes():
+    # (p0, p1) pairs mostly dead: backtracking records dead prefixes and
+    # later draws skip them without re-pruning
+    params = [Param(f"p{k}", tuple(range(8))) for k in range(4)]
+    cons = [VectorConstraint(lambda c: (c["p0"] * 9 + c["p1"]) % 31 == 0),
+            VectorConstraint(lambda c: (c["p2"] + c["p3"]) % 4 == 0)]
+    gen = force_propagation(GenerativeSpace(params, cons, name="dead"))
+    gen.sample_feasible(np.random.default_rng(1), 64)
+    assert len(gen._dead_prefixes) > 0
+    before = len(gen._dead_prefixes)
+    calls = {"n": 0}
+    orig = gen._prune_axis
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    gen._prune_axis = counting
+    gen.sample_feasible(np.random.default_rng(2), 64)
+    warm = calls["n"]
+    # a fully cold re-run of the same draws pays strictly more prunes
+    cold = force_propagation(GenerativeSpace(params, cons, name="dead2"))
+    calls2 = {"n": 0}
+    orig2 = cold._prune_axis
+
+    def counting2(*a, **k):
+        calls2["n"] += 1
+        return orig2(*a, **k)
+
+    cold._prune_axis = counting2
+    cold.sample_feasible(np.random.default_rng(1), 64)
+    cold.sample_feasible(np.random.default_rng(2), 64)
+    assert warm < calls2["n"]
+    assert len(gen._dead_prefixes) >= before
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_axis_exchange_parity_with_enumerated(seed):
+    params, cons = random_constrained_case(seed)
+    ref = reference_enumeration(params, cons)
+    if len(ref) == 0:
+        pytest.skip("all configs filtered")
+    enum, gen = twin_spaces(params, cons, name=f"ax{seed}")
+    codes = enum_codes(enum)
+    for i, g in enumerate(codes[:: max(1, len(codes) // 12)]):
+        pos = int(np.searchsorted(codes, g))
+        for j in range(enum.dim):
+            want = {int(codes[k]) for k in enum.axis_exchange(pos, j)}
+            assert set(gen.axis_exchange(int(g), j)) == want
+
+
+def test_axis_exchange_never_returns_infeasible_or_self():
+    params, cons = tight_space()
+    gen = GenerativeSpace(params, cons, name="axf")
+    rng = np.random.default_rng(4)
+    for code in gen.sample_feasible(rng, 16):
+        for j in range(gen.dim):
+            ex = gen.axis_exchange(int(code), j)
+            assert int(code) not in ex
+            if ex:
+                assert gen._feasible_mask(np.asarray(ex, np.int64)).all()
+
+
+def test_plain_callable_constraints_propagate_too():
+    # non-vector constraints go through the per-candidate pruning fallback
+    params = [Param("a", tuple(range(6))), Param("b", tuple(range(6)))]
+    cons = [lambda c: (c["a"] * c["b"]) % 5 == 1]
+    enum, gen = twin_spaces(params, cons, name="plain")
+    force_propagation(gen)
+    feasible = set(int(c) for c in enum_codes(enum))
+    draws = gen.sample_feasible(np.random.default_rng(0), 80)
+    assert set(int(c) for c in draws) <= feasible
+    assert gen._prop_draws > 0
+
+
+def test_conditional_constraint_reads_grow_deps_safely():
+    # a constraint that only reads "b" when a > 2: the probe may or may
+    # not see the read, but KeyError growth + the leaf check keep every
+    # drawn code feasible either way
+    params = [Param("a", tuple(range(6))), Param("b", tuple(range(6)))]
+
+    def tricky(c):
+        if c["a"] > 2:
+            return c["b"] % 2 == 0
+        return True
+
+    enum, gen = twin_spaces(params, [tricky], name="cond")
+    force_propagation(gen)
+    feasible = set(int(c) for c in enum_codes(enum))
+    draws = gen.sample_feasible(np.random.default_rng(3), 200)
+    assert set(int(c) for c in draws) == feasible
+
+
+# -- sticky adaptive state regression (satellite fix) ------------------------
+
+def test_failed_sample_restores_accept_ewma():
+    """A raising sample_feasible call must not leave the acceptance EWMA
+    crushed at its floor — pre-fix, the NEXT call on the same space opened
+    with a pathologically large first batch sized by the stale estimate."""
+    gen = GenerativeSpace([Param("a", (1, 2, 3)), Param("b", (1, 2, 3))],
+                          [lambda c: c["a"] > 100], name="sticky")
+    assert gen._accept_ewma == 1.0
+    with pytest.raises(ValueError, match="feasible"):
+        gen.sample_feasible(np.random.default_rng(0), 4)
+    assert gen._accept_ewma == 1.0        # restored, not floor-stuck
+    draws_first = gen._accept_draws
+    with pytest.raises(ValueError, match="feasible"):
+        gen.sample_feasible(np.random.default_rng(1), 4)
+    # identical adaptive state -> identical batch schedule on the retry
+    assert gen._accept_draws == 2 * draws_first
+    assert gen._accept_ewma == 1.0
+
+
+def test_failed_sample_restores_ewma_on_pure_rejection_path_too():
+    gen = GenerativeSpace([Param("a", (1, 2, 3)), Param("b", (1, 2, 3))],
+                          [lambda c: c["a"] > 100], name="sticky2")
+    gen.PROPAGATE_BELOW = -1.0
+    with pytest.raises(ValueError, match="feasible"):
+        gen.sample_feasible(np.random.default_rng(0), 4)
+    assert gen._accept_ewma == 1.0

@@ -1,0 +1,105 @@
+"""Scheduled-job producer (launch/schedule.py): interval pacing, queue
+coalescing, spec parsing, and the --once CLI pass."""
+import pytest
+
+from repro.launch.schedule import JobSpec, ScheduleProducer, main
+from repro.store.queue import TuningJobQueue
+from repro.store.records import TuningRecordStore
+
+
+def _producer(tmp_path, specs, t, store=None, **kw):
+    path = str(tmp_path / "store")
+    store = store or TuningRecordStore(path, load=False)
+    return ScheduleProducer(path, specs, clock=lambda: t[0],
+                            store=store, worker="cron", **kw), store
+
+
+# -- spec parsing -------------------------------------------------------------
+
+def test_jobspec_parse_with_and_without_budget():
+    s = JobSpec.parse("dryrun[moe×decode×v5e-8]:scheduled_retune:3600")
+    assert s == JobSpec("dryrun[moe×decode×v5e-8]", "scheduled_retune",
+                        3600.0, None)
+    s = JobSpec.parse("kernel[gemm×4096x4096x4096×v5e]:bench_sweep:86400:80")
+    assert s.job_type == "bench_sweep" and s.budget == 80
+    assert s.every_s == 86400.0
+
+
+@pytest.mark.parametrize("bad", [
+    "justakey", "key:scheduled_retune", "key:notatype:60",
+    "key:scheduled_retune:0", "key:scheduled_retune:-5",
+    "key:scheduled_retune:60:x:y",
+])
+def test_jobspec_parse_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        JobSpec.parse(bad)
+
+
+# -- interval pacing and coalescing ------------------------------------------
+
+def test_step_submits_each_spec_then_spaces_by_interval(tmp_path):
+    t = [1000.0]
+    specs = [JobSpec("cell-a", "scheduled_retune", 60.0),
+             JobSpec("cell-b", "bench_sweep", 120.0, budget=7)]
+    prod, store = _producer(tmp_path, specs, t)
+    assert prod.step() == 2, "every spec fires on the first pass"
+    open_now = prod.queue.open_tickets()
+    assert {tk.key: tk.job_type for tk in open_now} == {
+        "cell-a": "scheduled_retune", "cell-b": "bench_sweep"}
+    assert next(tk for tk in open_now if tk.key == "cell-b").budget == 7
+    assert prod.step() == 0, "inside both intervals: nothing fires"
+    # service both so the keys are free again
+    q = TuningJobQueue(str(tmp_path / "store"), worker="daemon",
+                       clock=lambda: t[0], appender=store)
+    for _ in range(2):
+        q.done(q.claim())
+    t[0] += 61.0
+    assert prod.step() == 1, "only cell-a's 60s interval has elapsed"
+    t[0] += 59.0                    # cell-a inside its fresh interval
+    assert prod.step() == 1, "cell-b's 120s interval elapses now"
+    assert prod.submitted == 4 and prod.coalesced == 0
+    prod.close()
+
+
+def test_open_job_coalesces_instead_of_stacking(tmp_path):
+    """An interval shorter than the fleet's service latency must not stack
+    duplicate jobs: the queue refuses the submit and the producer counts
+    it, re-trying next interval."""
+    t = [1000.0]
+    prod, store = _producer(
+        tmp_path, [JobSpec("cell-a", "scheduled_retune", 10.0)], t)
+    assert prod.step() == 1
+    t[0] += 11.0                    # interval elapsed, job still unserviced
+    assert prod.step() == 0
+    assert prod.coalesced == 1 and prod.submitted == 1
+    assert len(prod.queue) == 1, "exactly one open job for the key"
+    # restart amnesia is harmless for the same reason
+    prod2 = ScheduleProducer(str(tmp_path / "store"),
+                             [JobSpec("cell-a", "scheduled_retune", 10.0)],
+                             clock=lambda: t[0], store=store, worker="cron2")
+    assert prod2.step() == 0 and prod2.coalesced == 1
+    prod.close()
+
+
+def test_run_max_steps_counts_accepted_submissions(tmp_path):
+    t = [1000.0]
+    prod, _ = _producer(
+        tmp_path, [JobSpec("cell-a", "scheduled_retune", 1e9)], t)
+    assert prod.run(max_steps=3, poll_every_s=0.0) == 1, \
+        "first step submits; the huge interval silences the rest"
+    prod.close()
+
+
+# -- CLI ----------------------------------------------------------------------
+
+def test_cli_once_submits_and_exits(tmp_path, capsys):
+    path = str(tmp_path / "store")
+    main(["--store", path, "--once",
+          "--job", "cell-a:scheduled_retune:60",
+          "--job", "cell-b:bench_sweep:3600:12"])
+    out = capsys.readouterr().out
+    assert "2 job(s) submitted" in out
+    store = TuningRecordStore(path, load=False)
+    q = TuningJobQueue(path, worker="check", appender=store)
+    assert {tk.key for tk in q.open_tickets()} == {"cell-a", "cell-b"}
+    store.close()

@@ -98,3 +98,50 @@ def test_prop_neighbors_match_dict_probe_reference(case):
         assert csr.adjacent_neighbors(i) == want_a
         assert on_demand.adjacent_neighbors(i) == want_a
         assert csr.index_of_value_indices(ref[i]) == i
+
+
+# -- constraint-propagating sampler vs rejection verdicts (DESIGN.md §15) ----
+# deterministic seeded variants of the same properties always run in
+# test_generative_space.py; these explore hypothesis-generated spaces
+
+from repro.core.searchspace import GenerativeSpace  # noqa: E402
+
+
+@given(constrained_cases(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_prop_propagating_draws_are_rejection_feasible(case, seed):
+    """Every code the propagating sampler emits must be feasible by the
+    rejection sampler's exact verdict, and on small spaces the support
+    equals the enumerated feasible set (membership parity)."""
+    params, cons = case
+    ref = reference_enumeration(params, cons)
+    assume(len(ref) > 0)
+    enum = SearchSpace(params, cons, name="pp-enum")
+    gen = GenerativeSpace(params, cons, name="pp-gen")
+    gen._accept_ewma = 0.0                      # force the propagating path
+    feasible = set(int(c) for c in
+                   enum.value_indices.astype(np.int64) @ enum._strides)
+    draws = gen.sample_feasible(np.random.default_rng(seed), 48)
+    assert gen._prop_draws > 0
+    got = set(int(c) for c in draws)
+    assert got <= feasible
+    # verdict parity the other way: _feasible_mask agrees on every draw
+    assert gen._feasible_mask(draws).all()
+
+
+@given(constrained_cases(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_prop_fixed_seed_determinism_on_both_paths(case, seed):
+    params, cons = case
+    ref = reference_enumeration(params, cons)
+    assume(len(ref) > 0)
+
+    def fresh(ewma):
+        g = GenerativeSpace(params, cons, name="det")
+        g._accept_ewma = ewma
+        return g
+
+    for ewma in (1.0, 0.0):                     # rejection / propagation
+        a = fresh(ewma).sample_feasible(np.random.default_rng(seed), 32)
+        b = fresh(ewma).sample_feasible(np.random.default_rng(seed), 32)
+        np.testing.assert_array_equal(a, b)

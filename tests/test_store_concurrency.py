@@ -439,6 +439,125 @@ def test_released_racer_token_survives_compaction_fold(tmp_path):
     store2.close()
 
 
+def test_quarantine_after_k_dead_claimants(tmp_path):
+    """A poison job that kills every claimant must not re-arm forever:
+    after K consecutive leases expire unreleased, the next would-be
+    claimant quarantines the group (fresh-token terminal close) instead
+    of claiming it. A NEW submit for the key re-arms fresh."""
+    path = str(tmp_path / "store")
+    t = [100.0]
+    clk = lambda: t[0]                                       # noqa: E731
+    store = TuningRecordStore(path, load=False)
+    a = _queue(path, "a", clk, store)
+    assert a.submit(_Req("cell-k", t=1.0))
+    assert a.claim().token == 1     # claimant 1 dies (never done/release)
+    b = TuningJobQueue(path, worker="b", claim_ttl=10.0, clock=clk,
+                       appender=store, quarantine_after=2)
+    assert b.claim() is None        # live lease holds; b's TTL clock starts
+    t[0] += 11.0
+    assert b.claim().token == 2, \
+        "one burned lease is below the threshold: re-arm normally"
+    t[0] += 11.0                    # claimant 2 dies too
+    assert b.claim() is None, "threshold reached: quarantined, not claimed"
+    assert b.quarantined == 1
+    assert len(b) == 0, "quarantine is terminal — job no longer offered"
+    fresh = _queue(path, "c", clk, store)
+    assert len(fresh) == 0 and fresh.quarantined == 1, \
+        "a fresh fold sees the quarantine records and the counter"
+    # the key re-arms for NEW submissions with a strictly higher fence
+    assert fresh.submit(_Req("cell-k", t=t[0]))
+    took = fresh.claim()
+    assert took is not None and took.token == 4, \
+        "quarantine burned token 3; the re-armed claim must be above it"
+    fresh.done(took)
+
+
+def test_voluntary_releases_never_count_toward_quarantine(tmp_path):
+    """Graceful give-backs (service failed, shutdown) and aborted racers
+    release their tokens — they are NOT dead claimants and must not push
+    a healthy job into quarantine."""
+    path = str(tmp_path / "store")
+    t = [100.0]
+    clk = lambda: t[0]                                       # noqa: E731
+    store = TuningRecordStore(path, load=False)
+    q = TuningJobQueue(path, worker="a", claim_ttl=10.0, clock=clk,
+                       appender=store, quarantine_after=2)
+    assert q.submit(_Req("cell-k", t=1.0))
+    for _ in range(4):              # 4 voluntary give-backs, 0 deaths
+        tk = q.claim()
+        assert tk is not None
+        q.release(tk)
+    tk = q.claim()
+    assert tk is not None and q.quarantined == 0, \
+        "released leases are transparent to the quarantine count"
+    q.done(tk)
+
+
+def test_quarantined_group_gcs_under_compaction(tmp_path):
+    """compact_store's job fold must treat ``quarantine`` as a token-fenced
+    terminal close — the group folds away under retention like a done
+    group, instead of being resurrected as open forever."""
+    path = str(tmp_path / "store")
+    t = [100.0]
+    clk = lambda: t[0]                                       # noqa: E731
+    store = TuningRecordStore(path, load=False)
+    q = TuningJobQueue(path, worker="a", claim_ttl=10.0, clock=clk,
+                       appender=store, quarantine_after=1)
+    assert q.submit(_Req("cell-k", t=1.0))
+    assert q.claim() is not None    # the one claimant dies
+    t[0] += 11.0
+    assert q.claim() is None and q.quarantined == 1
+    store.close()
+    store2 = TuningRecordStore(path, load=False)
+    store2.append(_rec(0), fingerprint=FP)      # seals the control segment
+    stats = compact_store(path, retention_s=0.0, now=t[0] + 1.0)
+    assert stats.folded and stats.dropped_retune > 0, \
+        "the quarantined group must GC like a completed one"
+    assert len(_queue(path, "c", clk, store2)) == 0
+    store2.close()
+
+
+def test_stale_quarantine_write_is_fence_rejected(tmp_path):
+    """A quarantine record whose token is below the group's live claim is
+    a superseded daemon's late write: every fold must refuse it, exactly
+    as it refuses a fenced done."""
+    path = str(tmp_path / "store")
+    t = [100.0]
+    clk = lambda: t[0]                                       # noqa: E731
+    store = TuningRecordStore(path, load=False)
+    q = _queue(path, "a", clk, store)
+    assert q.submit(_Req("cell-k", t=1.0))
+    tk = q.claim()
+    assert tk is not None and tk.token == 1
+    store.append_control({"kind": "job", "state": "quarantine", "id": tk.id,
+                          "key": tk.key, "by": "zombie", "t": clk(),
+                          "token": 0})
+    fresh = _queue(path, "c", clk, store)
+    assert len(fresh) == 1 and fresh.quarantined == 0
+    assert fresh.rejected_writes == 1
+    q.done(tk)
+    assert len(_queue(path, "d", clk, store)) == 0
+
+
+def test_retune_daemon_surfaces_quarantined_counter(tmp_path):
+    """RetuneDaemon's fleet stats delegate to its queue's fold."""
+    from repro.launch.retune import RetuneDaemon
+    path = str(tmp_path / "store")
+    t = [100.0]
+    clk = lambda: t[0]                                       # noqa: E731
+    store = TuningRecordStore(path, load=False)
+    q = TuningJobQueue(path, worker="a", claim_ttl=10.0, clock=clk,
+                       appender=store, quarantine_after=1)
+    assert q.submit(_Req("cell-k", t=1.0))
+    assert q.claim() is not None
+    t[0] += 11.0
+    assert q.claim() is None and q.quarantined == 1
+    daemon = RetuneDaemon(path, store=store, clock=clk,
+                          quarantine_after=1, worker="d")
+    assert daemon.quarantined == 1
+    assert daemon.step() is None, "nothing claimable on a quarantined key"
+
+
 def test_second_compactor_raises_while_lock_is_fresh(tmp_path):
     path = str(tmp_path / "store")
     store = TuningRecordStore(path)
